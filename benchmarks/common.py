@@ -1,0 +1,35 @@
+"""Shared benchmark harness: continuum fixture + CSV/JSON emission."""
+from __future__ import annotations
+
+import json
+import os
+import statistics as stats
+from pathlib import Path
+
+from repro.continuum.network import ContinuumNetwork
+from repro.continuum.orbits import Constellation
+
+OUT = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+REPS = 10 if FULL else 3
+
+
+def make_net(n_planes: int = 8, sats_per_plane: int = 8) -> ContinuumNetwork:
+    return ContinuumNetwork(Constellation(n_planes, sats_per_plane))
+
+
+def emit(name: str, us_per_call: float, derived: dict, record: dict | None
+         = None):
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{d}", flush=True)
+    OUT.mkdir(parents=True, exist_ok=True)
+    rec = {"name": name, "us_per_call": us_per_call, "derived": derived}
+    if record:
+        rec.update(record)
+    path = OUT / f"{name}.json"
+    path.write_text(json.dumps(rec, indent=1))
+
+
+def mean(xs):
+    xs = list(xs)
+    return stats.mean(xs) if xs else 0.0

@@ -1,0 +1,61 @@
+"""Paper Fig. 16: control-plane node-election runtime, 10 -> 10,000 nodes.
+
+Times the Databelt Compute phase (Dijkstra + reversed-path election with
+vicinity pruning) on synthetic random-geometric topologies, against Random
+election.  Paper: Databelt stays near Random because candidate-subset
+pruning bounds the decision space.
+"""
+from __future__ import annotations
+
+import random
+import time
+
+from benchmarks.common import FULL, emit
+from repro.core.propagation import compute
+from repro.core.topology import Node, TopologyGraph
+
+SIZES = [10, 100, 1000, 10_000] if not FULL else [10, 50, 100, 500, 1000,
+                                                  5000, 10_000]
+
+
+def synthetic_topology(n: int, degree: int = 4, seed: int = 0):
+    rng = random.Random(seed)
+    g = TopologyGraph()
+    for i in range(n):
+        g.add_node(Node(f"n{i}", "satellite"))
+    for i in range(n):
+        # ring + random chords: connected, low diameter
+        g.add_link(f"n{i}", f"n{(i + 1) % n}", 0.002, 12.5e9)
+        for _ in range(degree - 2):
+            j = rng.randrange(n)
+            if j != i:
+                g.add_link(f"n{i}", f"n{j}", 0.004, 12.5e9)
+    return g
+
+
+def run():
+    rows = []
+    for n in SIZES:
+        g = synthetic_topology(n)
+        ids = sorted(g.nodes)
+        rng = random.Random(1)
+        reps = 20 if n <= 1000 else 5
+        t0 = time.perf_counter()
+        for r in range(reps):
+            src, dst = rng.choice(ids), rng.choice(ids)
+            compute(g, src, dst, 2e6, 0.06)
+        db_us = (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        for r in range(reps):
+            rng.choice(ids)
+        rnd_us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append({"nodes": n, "databelt_us": round(db_us, 1),
+                     "random_us": round(rnd_us, 2)})
+    derived = {f"n{r['nodes']}_us": r["databelt_us"] for r in rows}
+    emit("fig16_service_scale", rows[-1]["databelt_us"], derived,
+         {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Fig. 2: state I/O share of total workflow latency (motivating
+experiment — stateless KVS configuration, varying input sizes).
+Paper: I/O contributes up to ~40% of total workflow latency."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_net, mean
+from repro.serverless.engine import WorkflowEngine
+from repro.serverless.workflow import flood_workflow
+
+SIZES_MB = [10, 20, 30, 40, 50]
+
+
+def run():
+    net = make_net()
+    rows = []
+    for size in SIZES_MB:
+        eng = WorkflowEngine(net, strategy="stateless")
+        ms = [eng.run_instance(flood_workflow(f"s{size}_{i}"), size * 1e6,
+                               t0=i * 90.0) for i in range(3)]
+        io = mean(m.read_time + m.write_time for m in ms)
+        tot = mean(m.latency for m in ms)
+        rows.append({"size_mb": size, "io_s": round(io, 3),
+                     "total_s": round(tot, 3),
+                     "io_share_pct": round(100 * io / tot, 1)})
+    derived = {"max_io_share_pct": max(r["io_share_pct"] for r in rows)}
+    emit("fig2_state_share", rows[-1]["total_s"] * 1e6, derived,
+         {"rows": rows, "paper_reference": {"max_io_share_pct": 40}})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``
+Prints ``name,us_per_call,derived`` CSV lines; JSON records land in
+``experiments/bench/``.  ``BENCH_FULL=1`` runs paper-size repetitions.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, fig2_state_share,
+                            fig10_availability, fig16_service_scale,
+                            table2_propagation, table3_scalability,
+                            table4_fusion)
+    benches = [
+        ("fig2_state_share", fig2_state_share.run),
+        ("table2_propagation", table2_propagation.run),
+        ("fig10_availability", fig10_availability.run),
+        ("table3_scalability", table3_scalability.run),
+        ("table4_fusion", table4_fusion.run),
+        ("fig16_service_scale", fig16_service_scale.run),
+        ("bench_kernels", bench_kernels.run),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print("FAILED:", ",".join(failed))
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

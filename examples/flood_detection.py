@@ -1,0 +1,42 @@
+"""The paper's illustrative scenario (Fig. 3/4) end to end: drones stream
+video to LEO satellites; Ingest filters blurry frames, Detect runs a person
+-detection DNN, Map fuses EO-satellite SAR with a flood CNN, Alarm notifies
+— all real JAX compute, with Databelt state propagation and function fusion.
+
+    PYTHONPATH=src python examples/flood_detection.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.continuum.network import ContinuumNetwork
+from repro.continuum.orbits import Constellation
+from repro.serverless.engine import WorkflowEngine
+from repro.serverless.workflow import flood_workflow
+
+
+def main():
+    net = ContinuumNetwork(Constellation(n_planes=8, sats_per_plane=8))
+    eng = WorkflowEngine(net, strategy="databelt", fusion_depth=2,
+                         real_compute=True)
+
+    wf = flood_workflow("flood-mission-0")
+    placement = eng.place_functions(wf, 0.0)
+    print("function placement (HyperDrive planner):")
+    for f, n in placement.items():
+        print(f"  {f:<8s} -> {n}")
+
+    m = eng.run_instance(wf, 10e6, t0=0.0)
+    print(f"\nworkflow latency   {m.latency:6.2f}s "
+          f"(compute {m.compute_time:.2f}s, state read {m.read_time:.2f}s, "
+          f"write {m.write_time:.2f}s)")
+    print(f"local state reads  {m.local_reads}/{m.reads} "
+          f"({100*m.local_availability:.0f}%)")
+    print(f"storage ops        {m.storage_ops} (fusion depth 2)")
+    print(f"SLO (60ms handoff) {m.slo_violations}/{m.handoffs} violations")
+    print("\nalarm state propagated to cloud; rescue teams notified.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Quickstart: Databelt state propagation on the 3D continuum in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.continuum.network import ContinuumNetwork
+from repro.continuum.orbits import Constellation
+from repro.serverless.engine import WorkflowEngine
+from repro.serverless.workflow import flood_workflow
+
+
+def main():
+    # a 64-satellite Walker shell + cloud/edge/drone/EO sites
+    net = ContinuumNetwork(Constellation(n_planes=8, sats_per_plane=8))
+
+    print(f"{'system':<10s} {'latency':>8s} {'read':>7s} {'write':>7s} "
+          f"{'local%':>7s} {'hops':>5s} {'SLO viol':>8s}")
+    for strategy in ("databelt", "random", "stateless"):
+        eng = WorkflowEngine(net, strategy=strategy)
+        ms = [eng.run_instance(flood_workflow(f"{strategy}-{i}"), 10e6,
+                               t0=i * 90.0) for i in range(5)]
+        n = len(ms)
+        print(f"{strategy:<10s} "
+              f"{sum(m.latency for m in ms)/n:7.2f}s "
+              f"{sum(m.read_time for m in ms)/n:6.2f}s "
+              f"{sum(m.write_time for m in ms)/n:6.2f}s "
+              f"{100*sum(m.local_availability for m in ms)/n:6.1f}% "
+              f"{sum(m.mean_hops for m in ms)/n:5.2f} "
+              f"{100*sum(m.slo_violation_rate for m in ms)/n:7.1f}%")
+    print("\nDatabelt keeps function state local (paper: 79% local, 0.21 "
+          "hops, 0 SLO violations).")
+
+
+if __name__ == "__main__":
+    main()

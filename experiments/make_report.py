@@ -1,0 +1,55 @@
+"""Regenerates the data tables embedded in EXPERIMENTS.md from the JSON
+records in experiments/ (dry-run, roofline, bench)."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs.base import list_archs, shapes_for  # noqa: E402
+from repro.roofline.analysis import analyze_all, to_markdown  # noqa: E402
+
+ROOT = Path(__file__).resolve().parent
+
+
+def dryrun_table(mesh):
+    rows = []
+    for arch in list_archs():
+        for s in shapes_for(arch):
+            p = ROOT / "dryrun" / f"{arch}__{s.name}__{mesh}.json"
+            if not p.exists():
+                rows.append(f"| {arch} | {s.name} | MISSING | | | |")
+                continue
+            r = json.loads(p.read_text())
+            coll = sum(v["operand_bytes"] for v in r["collectives"].values())
+            nc = sum(v["count"] for v in r["collectives"].values())
+            rows.append(
+                f"| {arch} | {s.name} | {r['compile_s']:.0f}s | "
+                f"{r['memory']['peak_gb']:.1f} | {coll/1e9:.2f} | {nc} |")
+    hdr = ("| arch | shape | compile | peak GB/dev | coll GB/dev | #coll |\n"
+           "|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def bench_table():
+    out = []
+    for p in sorted((ROOT / "bench").glob("*.json")):
+        r = json.loads(p.read_text())
+        d = "; ".join(f"{k}={v}" for k, v in r["derived"].items())
+        out.append(f"| {r['name']} | {d} |")
+    return "| benchmark | headline metrics |\n|---|---|\n" + "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### single pod (16x16)\n")
+        print(dryrun_table("pod"))
+        print("\n### multi-pod (2x16x16)\n")
+        print(dryrun_table("multipod"))
+    if which in ("all", "roofline"):
+        print()
+        print(to_markdown(analyze_all()))
+    if which in ("all", "bench"):
+        print()
+        print(bench_table())

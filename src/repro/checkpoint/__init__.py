@@ -1,0 +1,1 @@
+from repro.checkpoint.twotier import TwoTierCheckpoint  # noqa: F401

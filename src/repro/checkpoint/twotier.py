@@ -1,0 +1,114 @@
+"""Two-tier checkpointing — the Databelt local/global storage design applied
+to training state.
+
+* local tier  — fast per-host shard dump ("state on the satellite"): written
+  every ``local_every`` steps, asynchronously.
+* global tier — durable full checkpoint ("state in the cloud"): written
+  every ``global_every`` steps.
+
+Restore prefers the freshest local checkpoint and falls back to the global
+tier (exactly the paper's read path).  ``restore`` re-shards onto whatever
+mesh/shardings the caller passes, so a restart may change topology
+(elastic scaling / failed hosts).
+"""
+from __future__ import annotations
+
+import json
+import pickle
+import threading
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(state):
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    return leaves, treedef
+
+
+class TwoTierCheckpoint:
+    def __init__(self, root: str, local_every: int = 10,
+                 global_every: int = 50, keep: int = 2):
+        self.root = Path(root)
+        self.local_dir = self.root / "local"
+        self.global_dir = self.root / "global"
+        self.local_every = local_every
+        self.global_every = global_every
+        self.keep = keep
+        self._pending: Optional[threading.Thread] = None
+        self.local_dir.mkdir(parents=True, exist_ok=True)
+        self.global_dir.mkdir(parents=True, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def maybe_save(self, state, step: int):
+        if step % self.global_every == 0:
+            self._save(state, step, self.global_dir)
+        elif step % self.local_every == 0:
+            self._save_async(state, step, self.local_dir)
+
+    def _save_async(self, state, step: int, tier: Path):
+        self.wait()
+        host_state = jax.tree.map(np.asarray, jax.device_get(state))
+        self._pending = threading.Thread(
+            target=self._write, args=(host_state, step, tier), daemon=True)
+        self._pending.start()
+
+    def _save(self, state, step: int, tier: Path):
+        self.wait()
+        host_state = jax.tree.map(np.asarray, jax.device_get(state))
+        self._write(host_state, step, tier)
+
+    def _write(self, host_state, step: int, tier: Path):
+        leaves, treedef = _flatten(host_state)
+        tmp = tier / f"step{step:08d}.tmp"
+        final = tier / f"step{step:08d}.ckpt"
+        with open(tmp, "wb") as f:
+            pickle.dump({"leaves": leaves, "treedef_repr": str(treedef),
+                         "step": step, "time": time.time()}, f,
+                        protocol=4)
+        tmp.rename(final)
+        self._gc(tier)
+
+    def _gc(self, tier: Path):
+        cks = sorted(tier.glob("step*.ckpt"))
+        for old in cks[:-self.keep]:
+            old.unlink(missing_ok=True)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # ------------------------------------------------------------------
+    def latest(self):
+        """(path, step, tier) of the freshest checkpoint across tiers."""
+        best = None
+        for tier_name, tier in (("local", self.local_dir),
+                                ("global", self.global_dir)):
+            for p in tier.glob("step*.ckpt"):
+                step = int(p.stem[4:])
+                if best is None or step > best[1]:
+                    best = (p, step, tier_name)
+        return best
+
+    def restore(self, abstract_state, shardings=None):
+        """Load freshest checkpoint, re-shard to ``shardings`` (elastic).
+        Returns (state, step) or (None, -1)."""
+        self.wait()
+        found = self.latest()
+        if found is None:
+            return None, -1
+        path, step, _ = found
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+        _, treedef = _flatten(abstract_state)
+        state = jax.tree_util.tree_unflatten(treedef, blob["leaves"])
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), state, shardings)
+        else:
+            state = jax.tree.map(jax.numpy.asarray, state)
+        return state, step

@@ -1,0 +1,3 @@
+from repro.continuum.orbits import Constellation, GroundSite  # noqa: F401
+from repro.continuum.network import ContinuumNetwork  # noqa: F401
+from repro.continuum.storage import TwoTierStorage  # noqa: F401

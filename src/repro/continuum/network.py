@@ -1,0 +1,172 @@
+"""Time-varying 3D-continuum network built from the orbital model.
+
+Bandwidths follow the paper (§2.1): ISL ~100 Gb/s; satellite-ground
+~300 Mb/s; terrestrial edge-cloud ~1 Gb/s.  ``graph_at(t)`` produces the
+TopologyGraph snapshot the Databelt Identify phase consumes; ``available``
+implements R-5 (a satellite is available when it can reach the required
+node types).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.continuum.orbits import (Constellation, GroundSite,
+                                    line_of_sight, propagation_latency,
+                                    visible_from_ground)
+from repro.core.topology import (CLOUD, DRONE, EDGE, EO, GROUND, SAT, Node,
+                                 TopologyGraph)
+
+ISL_BW = 100e9 / 8          # bytes/s (100 Gb/s)
+GROUND_BW = 300e6 / 8       # bytes/s (300 Mb/s)
+TERRA_BW = 1e9 / 8          # bytes/s
+EO_BW = 100e9 / 8
+
+
+@dataclass
+class SiteSpec:
+    id: str
+    kind: str
+    site: GroundSite
+    cpu: float = 4.0
+    mem: float = 8e9
+
+
+class ContinuumNetwork:
+    """Cloud + edge + drones + EO + a Walker LEO shell."""
+
+    def __init__(self, constellation: Optional[Constellation] = None,
+                 sites: Optional[List[SiteSpec]] = None,
+                 sat_cpu: float = 4.0, sat_mem: float = 8e9,
+                 cache_quantum: float = 1.0):
+        self.constellation = constellation or Constellation()
+        if sites is None:
+            sites = default_sites()
+        self.sites = sites
+        self.sat_cpu, self.sat_mem = sat_cpu, sat_mem
+        self.cache_quantum = cache_quantum
+        self._cache: Dict[float, TopologyGraph] = {}
+        # persistent node objects so resource accounting survives snapshots
+        self._nodes: Dict[str, Node] = {}
+        self._make_nodes()
+
+    def _make_nodes(self):
+        c = self.constellation
+        for i in range(len(c)):
+            nid = c.sat_id(i)
+            self._nodes[nid] = Node(
+                nid, SAT, cpu=self.sat_cpu, mem=self.sat_mem,
+                t_orb=30.0, t_max=85.0,
+                position=(lambda t, _i=i: c.position(_i, t)))
+        for s in self.sites:
+            self._nodes[s.id] = Node(
+                s.id, s.kind, cpu=s.cpu, mem=s.mem,
+                position=(lambda t, _s=s.site: _s.position(t)))
+
+    @property
+    def node_ids(self) -> List[str]:
+        return sorted(self._nodes)
+
+    # ------------------------------------------------------------------
+    def graph_at(self, t: float) -> TopologyGraph:
+        key = round(t / self.cache_quantum) * self.cache_quantum
+        if key in self._cache:
+            return self._cache[key]
+        g = TopologyGraph()
+        for n in self._nodes.values():
+            g.add_node(n)
+        c = self.constellation
+        pos = {c.sat_id(i): c.position(i, key) for i in range(len(c))}
+        for s in self.sites:
+            pos[s.id] = s.site.position(key)
+        # ISLs
+        for i in range(len(c)):
+            me = c.sat_id(i)
+            for j in c.isl_neighbors(i):
+                other = c.sat_id(j)
+                if line_of_sight(pos[me], pos[other]):
+                    g.add_link(me, other,
+                               propagation_latency(pos[me], pos[other]),
+                               ISL_BW, bidirectional=False)
+        # ground <-> satellite: the CLOUD has no direct satellite link —
+        # it reaches orbit via ground stations + terrestrial backbone,
+        # which is what makes cloud state multi-hop from a satellite
+        for s in self.sites:
+            if s.kind in (EO, CLOUD):
+                continue
+            for i in range(len(c)):
+                sid = c.sat_id(i)
+                if visible_from_ground(pos[s.id], pos[sid]):
+                    g.add_link(s.id, sid,
+                               propagation_latency(pos[s.id], pos[sid]),
+                               GROUND_BW)
+        # EO satellite(s): ISL-class links to visible LEO sats
+        for s in self.sites:
+            if s.kind != EO:
+                continue
+            for i in range(len(c)):
+                sid = c.sat_id(i)
+                if line_of_sight(pos[s.id], pos[sid]):
+                    g.add_link(s.id, sid,
+                               propagation_latency(pos[s.id], pos[sid]),
+                               EO_BW)
+        # terrestrial backbone: edges/drones/ground <-> cloud
+        clouds = [s for s in self.sites if s.kind == CLOUD]
+        for s in self.sites:
+            if s.kind in (EDGE, DRONE, GROUND):
+                for cl in clouds:
+                    g.add_link(s.id, cl.id, 0.020, TERRA_BW)
+        if len(self._cache) > 256:
+            self._cache.clear()
+        self._cache[key] = g
+        return g
+
+    # ------------------------------------------------------------------
+    def available(self, nid: str, t: float) -> bool:
+        """R-5: ground/cloud/edge always; satellites when connected (degree
+        > 0 toward the required types via the snapshot graph)."""
+        node = self._nodes.get(nid)
+        if node is None:
+            return False
+        if node.kind != SAT:
+            return True
+        g = self.graph_at(t)
+        return len(g.neighbors(nid)) > 0
+
+
+def default_sites() -> List[SiteSpec]:
+    """Paper-scenario sites: one cloud DC, one edge node, a drone zone over
+    the flood area, one EO satellite (modeled as high-altitude site... the
+    EO sat gets a real orbit below) and a ground station."""
+    from repro.continuum.orbits import OrbitalElement
+    import math as m
+    sites = [
+        SiteSpec("cloud0", CLOUD, GroundSite(m.radians(48.2),
+                                             m.radians(16.4)),
+                 cpu=64.0, mem=256e9),
+        SiteSpec("edge0", EDGE, GroundSite(m.radians(47.8), m.radians(16.2)),
+                 cpu=4.0, mem=2e9),
+        SiteSpec("drone0", DRONE, GroundSite(m.radians(47.5),
+                                             m.radians(16.0), 500.0),
+                 cpu=2.0, mem=1e9),
+        SiteSpec("ground0", GROUND, GroundSite(m.radians(48.0),
+                                               m.radians(16.5)),
+                 cpu=8.0, mem=16e9),
+    ]
+    # EO satellite on a sun-synchronous-ish higher orbit
+    eo_orbit = OrbitalElement(785_000.0, m.radians(98.0), 0.3, 0.1)
+    eo = SiteSpec("eo0", EO, GroundSite(0, 0), cpu=2.0, mem=4e9)
+    eo.site = _OrbitSite(eo_orbit)
+    sites.append(eo)
+    return sites
+
+
+class _OrbitSite:
+    """Adapter giving an orbiting node the GroundSite.position interface."""
+
+    def __init__(self, element):
+        self.element = element
+
+    def position(self, t: float):
+        return self.element.position(t)

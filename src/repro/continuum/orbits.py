@@ -1,0 +1,139 @@
+"""Orbital mechanics for a Walker-delta LEO constellation + ground sites.
+
+Circular orbits, spherical Earth: position(t) from plane RAAN + phase; the
+Earth rotates under the constellation, so ground-station visibility changes
+continuously — the paper's "satellites move in and out of range" dynamic,
+modeled more faithfully than its tc-based testbed (paper §6.6 discussion).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Tuple
+
+R_EARTH = 6_371_000.0          # m
+MU = 3.986004418e14            # m^3/s^2
+C_LIGHT = 299_792_458.0        # m/s
+OMEGA_EARTH = 7.2921159e-5     # rad/s
+
+
+def _rot_z(v, ang):
+    c, s = math.cos(ang), math.sin(ang)
+    return (c * v[0] - s * v[1], s * v[0] + c * v[1], v[2])
+
+
+def _rot_x(v, ang):
+    c, s = math.cos(ang), math.sin(ang)
+    return (v[0], c * v[1] - s * v[2], s * v[1] + c * v[2])
+
+
+@dataclass(frozen=True)
+class OrbitalElement:
+    altitude: float          # m
+    inclination: float       # rad
+    raan: float              # rad (right ascension of ascending node)
+    phase: float             # rad (initial anomaly)
+
+    @property
+    def radius(self) -> float:
+        return R_EARTH + self.altitude
+
+    @property
+    def angular_rate(self) -> float:
+        return math.sqrt(MU / self.radius ** 3)
+
+    def position(self, t: float) -> Tuple[float, float, float]:
+        """ECI position at time t (m)."""
+        ang = self.phase + self.angular_rate * t
+        v = (self.radius * math.cos(ang), self.radius * math.sin(ang), 0.0)
+        v = _rot_x(v, self.inclination)
+        return _rot_z(v, self.raan)
+
+
+@dataclass(frozen=True)
+class GroundSite:
+    """Fixed site on the rotating Earth (cloud DC, edge node, drone zone)."""
+    lat: float               # rad
+    lon: float               # rad
+    altitude: float = 0.0
+
+    def position(self, t: float) -> Tuple[float, float, float]:
+        lon = self.lon + OMEGA_EARTH * t
+        r = R_EARTH + self.altitude
+        cl = math.cos(self.lat)
+        return (r * cl * math.cos(lon), r * cl * math.sin(lon),
+                r * math.sin(self.lat))
+
+
+def distance(a, b) -> float:
+    return math.sqrt(sum((x - y) ** 2 for x, y in zip(a, b)))
+
+
+def line_of_sight(a, b, margin: float = 100_000.0) -> bool:
+    """True when the segment a-b clears the Earth (chord height test)."""
+    ax, ay, az = a
+    dx = (b[0] - ax, b[1] - ay, b[2] - az)
+    L2 = dx[0] ** 2 + dx[1] ** 2 + dx[2] ** 2
+    if L2 == 0:
+        return True
+    t = -(ax * dx[0] + ay * dx[1] + az * dx[2]) / L2
+    t = min(max(t, 0.0), 1.0)
+    px = (ax + t * dx[0], ay + t * dx[1], az + t * dx[2])
+    return math.sqrt(px[0] ** 2 + px[1] ** 2 + px[2] ** 2) \
+        > R_EARTH + margin
+
+
+def visible_from_ground(site_pos, sat_pos, min_elevation_deg: float = 10.0
+                        ) -> bool:
+    """Elevation-mask visibility test."""
+    sx = [b - a for a, b in zip(site_pos, sat_pos)]
+    r = math.sqrt(sum(x * x for x in site_pos))
+    up = [x / r for x in site_pos]
+    d = math.sqrt(sum(x * x for x in sx))
+    if d == 0:
+        return True
+    sin_el = sum(u * s for u, s in zip(up, sx)) / d
+    return sin_el >= math.sin(math.radians(min_elevation_deg))
+
+
+class Constellation:
+    """Walker-delta: ``n_planes`` x ``sats_per_plane`` at ``altitude``."""
+
+    def __init__(self, n_planes: int = 6, sats_per_plane: int = 8,
+                 altitude: float = 550_000.0,
+                 inclination_deg: float = 53.0, phasing: float = 0.5):
+        self.n_planes = n_planes
+        self.sats_per_plane = sats_per_plane
+        self.elements: List[OrbitalElement] = []
+        inc = math.radians(inclination_deg)
+        for p in range(n_planes):
+            raan = 2 * math.pi * p / n_planes
+            for s in range(sats_per_plane):
+                phase = 2 * math.pi * (s + phasing * p / n_planes) \
+                    / sats_per_plane
+                self.elements.append(
+                    OrbitalElement(altitude, inc, raan, phase))
+
+    def __len__(self):
+        return len(self.elements)
+
+    def sat_id(self, idx: int) -> str:
+        return f"sat{idx}"
+
+    def position(self, idx: int, t: float):
+        return self.elements[idx].position(t)
+
+    def isl_neighbors(self, idx: int) -> List[int]:
+        """Grid+ ISL topology: fore/aft in plane, left/right cross-plane."""
+        p, s = divmod(idx, self.sats_per_plane)
+        n = []
+        n.append(p * self.sats_per_plane + (s + 1) % self.sats_per_plane)
+        n.append(p * self.sats_per_plane + (s - 1) % self.sats_per_plane)
+        n.append(((p + 1) % self.n_planes) * self.sats_per_plane + s)
+        n.append(((p - 1) % self.n_planes) * self.sats_per_plane + s)
+        return n
+
+
+def propagation_latency(a, b, processing: float = 0.0005) -> float:
+    """One-way latency: slant range / c + per-hop processing."""
+    return distance(a, b) / C_LIGHT + processing

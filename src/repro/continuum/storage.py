@@ -1,0 +1,191 @@
+"""Two-tier storage (paper §3.2): per-node local KVS + global cloud KVS.
+
+Reads resolve through the Databelt State Key: local hit (same node) costs
+only the KVS op; otherwise the value streams over the lowest-latency path.
+The global tier provides redundancy — every write also (asynchronously)
+lands in the cloud KVS, so a vanished local copy falls back there.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.keys import StateKey
+from repro.core.topology import CLOUD, TopologyGraph
+
+KVS_OP_LATENCY = 0.0008     # per-request local KVS overhead (seconds)
+KVS_READ_BW = 40e6          # bytes/s — Pi-class KVS read + deserialization
+KVS_WRITE_BW = 30e6         # bytes/s — Pi-class KVS write + serialization
+
+
+@dataclass
+class StoredState:
+    key: StateKey
+    size: float
+    payload: object = None
+
+
+@dataclass
+class AccessResult:
+    latency: float              # total (KVS + serialization + network)
+    hops: int
+    local: bool
+    from_global: bool = False
+    network_latency: float = 0.0  # path latency + wire transfer only
+
+
+class TwoTierStorage:
+    def __init__(self, graph_fn: Callable[[float], TopologyGraph]):
+        self.graph_fn = graph_fn
+        self.local: Dict[str, Dict[str, StoredState]] = {}
+        self.global_store: Dict[str, StoredState] = {}
+        # per-node KVS service queue: requests serialize on the holder —
+        # under parallel workflows the single cloud KVS becomes the
+        # bottleneck for Stateless, while Databelt spreads load over
+        # satellite-local stores (paper Table 3 / Fig 13)
+        self.busy_until: Dict[str, float] = {}
+
+    def _service(self, node: str, t: float, service_s: float) -> float:
+        """FIFO queueing at the node's KVS; returns total (wait+service)."""
+        start = max(t, self.busy_until.get(node, 0.0))
+        self.busy_until[node] = start + service_s
+        return (start - t) + service_s
+
+    def _cloud(self, graph: TopologyGraph) -> Optional[str]:
+        return next((n.id for n in graph.nodes.values()
+                     if n.kind == CLOUD), None)
+
+    # ------------------------------------------------------------------
+    def put(self, key: StateKey, size: float, payload=None, t: float = 0.0,
+            writer_node: Optional[str] = None,
+            replicate_global: bool = True,
+            global_sync: bool = False,
+            account: bool = True) -> AccessResult:
+        """Write from ``writer_node`` to ``key.storage_address``."""
+        graph = self.graph_fn(t)
+        src = writer_node or key.storage_address
+        dst = key.storage_address
+        st = StoredState(key, size, payload)
+        lat, hops = self._transfer(graph, src, dst, size)
+        if not math.isfinite(lat):
+            # target unreachable right now: keep the state local (the
+            # Offload fallback) — the global replica still happens
+            dst = src
+            st = StoredState(key.moved(src), size, payload)
+            lat, hops = 0.0, 0
+        self.local.setdefault(dst, {})[st.key.encoded()] = st
+        self.local.setdefault(dst, {})[key.encoded()] = st
+        if not account:
+            if replicate_global:
+                self.global_store[key.encoded()] = st
+            return AccessResult(0.0, hops, src == dst)
+        ser = self._service(dst, t, KVS_OP_LATENCY + size / KVS_WRITE_BW)
+        total = ser + lat
+        if replicate_global:
+            # synchronous redundancy write to the cloud KVS (paper: write
+            # times are nearly system-independent because every system pays
+            # this cloud-bound leg)
+            self.global_store[key.encoded()] = st
+            cloud = self._cloud(graph)
+            if cloud is not None and cloud != dst:
+                glat, _ = self._transfer(graph, src, cloud, size)
+                if math.isfinite(glat):
+                    gsrv = self._service(cloud, t + total + glat,
+                                         KVS_OP_LATENCY + size / KVS_WRITE_BW)
+                    if global_sync:
+                        # stateless-style synchronous durability
+                        total += glat + gsrv
+                    # else: async replication — occupies the cloud KVS
+                    # (queueing above) but stays off the critical path
+        return AccessResult(total, hops, src == dst,
+                            network_latency=lat)
+
+    def get(self, key: StateKey, reader_node: str,
+            t: float = 0.0) -> Tuple[Optional[StoredState], AccessResult]:
+        graph = self.graph_fn(t)
+        enc = key.encoded()
+        # local tier on the reader itself
+        st = self.local.get(reader_node, {}).get(enc)
+        if st is not None:
+            ser = self._service(reader_node, t,
+                                KVS_OP_LATENCY + st.size / KVS_READ_BW)
+            return st, AccessResult(ser, 0, True)
+        # local tier on the address node
+        holder = key.storage_address
+        st = self.local.get(holder, {}).get(enc)
+        if st is not None and holder in graph.nodes:
+            lat, hops = self._transfer(graph, holder, reader_node, st.size)
+            if math.isfinite(lat):
+                ser = self._service(holder, t,
+                                    KVS_OP_LATENCY + st.size / KVS_READ_BW)
+                return st, AccessResult(ser + lat, hops,
+                                        False, network_latency=lat)
+        # global tier fallback (holder missing or unreachable)
+        st = self.global_store.get(enc)
+        if st is not None:
+            cloud = self._cloud(graph) or holder
+            lat, hops = self._transfer(graph, cloud, reader_node, st.size)
+            if not math.isfinite(lat):
+                # total partition: charge a worst-case detour, keep running
+                lat, hops = 1.0, 8
+            ser = self._service(cloud or holder, t,
+                                KVS_OP_LATENCY + st.size / KVS_READ_BW)
+            return st, AccessResult(ser + lat, hops, False,
+                                    from_global=True, network_latency=lat)
+        return None, AccessResult(math.inf, 10**9, False)
+
+    def get_fused(self, keys, reader_node: str, t: float = 0.0):
+        """Grouped retrieval for a fusion group: ONE request per source node
+        (paper §4.2) instead of one per function."""
+        graph = self.graph_fn(t)
+        by_source: Dict[str, float] = {}
+        states = []
+        for key in keys:
+            loc = self._locate(key, reader_node, graph)
+            if loc is None:
+                return None, AccessResult(math.inf, 10**9, False)
+            st, src = loc
+            by_source[src] = by_source.get(src, 0.0) + st.size
+            states.append(st)
+        total_lat, max_hops, all_local, net = 0.0, 0, True, 0.0
+        for src, size in by_source.items():
+            lat, hops = self._transfer(graph, src, reader_node, size)
+            if not math.isfinite(lat):
+                lat, hops = 1.0, 8
+            total_lat += self._service(
+                src, t, KVS_OP_LATENCY + size / KVS_READ_BW) + lat
+            net += lat
+            max_hops = max(max_hops, hops)
+            all_local &= src == reader_node
+        return states, AccessResult(total_lat, max_hops, all_local,
+                                    network_latency=net)
+
+    # ------------------------------------------------------------------
+    def _locate(self, key: StateKey, reader: str, graph):
+        enc = key.encoded()
+        if enc in self.local.get(reader, {}):
+            return (self.local[reader][enc], reader)
+        holder = key.storage_address
+        if enc in self.local.get(holder, {}) and holder in graph.nodes:
+            return (self.local[holder][enc], holder)
+        if enc in self.global_store:
+            return (self.global_store[enc], self._cloud(graph) or holder)
+        return None
+
+    WAN_EFFICIENCY = 0.6   # TCP over 45-75 ms RTT links never hits line rate
+
+    def _transfer(self, graph: TopologyGraph, src: str, dst: str,
+                  size: float) -> Tuple[float, int]:
+        if src == dst:
+            return 0.0, 0
+        path, lat = graph.dijkstra(src, dst)
+        if not path:
+            return math.inf, 10**9
+        bw = min((graph.adj[a][b].bandwidth for a, b in zip(path, path[1:])),
+                 default=0.0)
+        if bw <= 0:
+            return math.inf, 10**9
+        if bw < 1e9:           # constrained (ground/WAN) bottleneck
+            bw *= self.WAN_EFFICIENCY
+        return lat + size / bw, len(path) - 1

@@ -1,0 +1,5 @@
+from repro.core.topology import Node, Link, TopologyGraph  # noqa: F401
+from repro.core.keys import StateKey  # noqa: F401
+from repro.core.propagation import identify, compute, offload, Databelt  # noqa: F401
+from repro.core.fusion import FusionGroup, plan_fusion_groups  # noqa: F401
+from repro.core.baselines import RandomPlacement, StatelessPlacement  # noqa: F401

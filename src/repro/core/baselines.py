@@ -1,0 +1,50 @@
+"""Baseline state-placement strategies from the paper's evaluation:
+
+* Stateless — all state lives in the global KVS on the cloud node; every
+  function fetches from / writes to the cloud.
+* Random    — state is stored on a uniformly random cluster node.
+"""
+from __future__ import annotations
+
+import random
+from typing import Callable, Optional
+
+from repro.core.keys import StateKey
+from repro.core.slo import SLO
+from repro.core.topology import CLOUD, TopologyGraph
+
+
+class StatelessPlacement:
+    name = "stateless"
+
+    def __init__(self, graph_fn, available, slo: SLO = SLO()):
+        self.graph_fn = graph_fn
+
+    def plan_state_placement(self, function_id, host, dst, data_size, t):
+        return None
+
+    def offload_state(self, function_id: str, host: str, t: float,
+                      key: StateKey) -> StateKey:
+        graph = self.graph_fn(t)
+        cloud = next((n.id for n in graph.nodes.values() if n.kind == CLOUD),
+                     host)
+        return key.moved(cloud)
+
+
+class RandomPlacement:
+    name = "random"
+
+    def __init__(self, graph_fn, available, slo: SLO = SLO(),
+                 seed: int = 0):
+        self.graph_fn = graph_fn
+        self.available = available
+        self.rng = random.Random(seed)
+
+    def plan_state_placement(self, function_id, host, dst, data_size, t):
+        return None
+
+    def offload_state(self, function_id: str, host: str, t: float,
+                      key: StateKey) -> StateKey:
+        graph = self.graph_fn(t)
+        ids = sorted(graph.nodes)
+        return key.moved(self.rng.choice(ids))

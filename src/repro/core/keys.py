@@ -1,0 +1,26 @@
+"""Databelt State Key (paper Fig. 7): WorkflowID | StorageAddress | FunctionID.
+
+Functions receive a key as input and emit a new key as output; the key is the
+only state-location coupling between functions ("key-based isolation").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class StateKey:
+    workflow_id: str
+    storage_address: str   # node id holding the (primary) copy
+    function_id: str
+
+    def encoded(self) -> str:
+        return f"{self.workflow_id}::{self.storage_address}::{self.function_id}"
+
+    @staticmethod
+    def decode(s: str) -> "StateKey":
+        w, a, f = s.split("::")
+        return StateKey(w, a, f)
+
+    def moved(self, node_id: str) -> "StateKey":
+        return replace(self, storage_address=node_id)

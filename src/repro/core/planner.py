@@ -1,0 +1,220 @@
+"""Workflow placement planner: the Eq. 9 optimization heuristic.
+
+    min_x  sum_{(fi,fj) in E} sum_{(ns,nd)} (L(ns,nd) + gamma(ns,nd)) x_is x_jd
+    s.t.   R-1 .. R-7
+
+Functions are placed greedily along the workflow's topological order —
+HyperDrive-style vicinity sampling around the predecessor, then SLO/QoS
+filtering and R-constraint checks, then latency scoring (paper §2.2) with
+the R-7 locality penalty.  Candidate-subset pruning keeps node election
+sub-linear in the topology size (paper Fig. 16 / §6.5).
+
+``plan_mesh_layout`` applies the same objective to the TPU build: candidate
+sharding layouts are scored by their estimated collective cost over the mesh
+topology (ICI within a pod, DCN between pods) and the Eq. 9 minimizer wins.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.slo import SLO, FunctionDemand, locality_penalty
+from repro.core.topology import CLOUD, SAT, TopologyGraph
+
+
+@dataclass
+class WorkflowSpec:
+    """Workflow DAG W = (F, E)."""
+    functions: List[str]
+    edges: List[Tuple[str, str]]          # (fi, fj): fi's output feeds fj
+    demands: Dict[str, FunctionDemand]
+    state_sizes: Dict[str, float]         # bytes produced by each function
+    sink_kind: str = CLOUD                # final function gravitates here
+                                          # ("" disables the sink rule)
+
+    def topo_order(self) -> List[str]:
+        indeg = {f: 0 for f in self.functions}
+        for _, j in self.edges:
+            indeg[j] += 1
+        order, frontier = [], [f for f, d in indeg.items() if d == 0]
+        while frontier:
+            f = frontier.pop(0)
+            order.append(f)
+            for i, j in self.edges:
+                if i == f:
+                    indeg[j] -= 1
+                    if indeg[j] == 0:
+                        frontier.append(j)
+        return order
+
+    def predecessors(self, f: str) -> List[str]:
+        return [i for i, j in self.edges if j == f]
+
+
+@dataclass
+class Plan:
+    placement: Dict[str, str]             # function -> node
+    objective: float
+    candidates_considered: int
+
+
+def vicinity(graph: TopologyGraph, center: str, radius_s: float,
+             limit: int = 64) -> List[str]:
+    """Nodes within ``radius_s`` seconds of latency of ``center``
+    (BFS-by-latency, pruned at ``limit`` candidates)."""
+    import heapq
+    out, seen = [], {center}
+    pq = [(0.0, center)]
+    while pq and len(out) < limit:
+        d, u = heapq.heappop(pq)
+        out.append(u)
+        for v, link in graph.neighbors(u).items():
+            if v in seen or v not in graph.nodes:
+                continue
+            nd = d + link.latency
+            if nd <= radius_s:
+                seen.add(v)
+                heapq.heappush(pq, (nd, v))
+    return out
+
+
+COMPUTE_KINDS = ("satellite", "cloud", "edge", "ground")
+
+
+def plan_workflow(graph: TopologyGraph, wf: WorkflowSpec, slo: SLO,
+                  entry_node: str, radius_s: float = 0.05,
+                  gamma_per_hop: float = 0.005,
+                  compute_kinds=COMPUTE_KINDS,
+                  busy: Optional[Dict[str, float]] = None,
+                  now: float = 0.0, busy_weight: float = 1.0) -> Plan:
+    """Greedy Eq. 9 minimizer with vicinity pruning + R-constraint checks.
+
+    ``busy`` (node -> busy-until time) adds HyperDrive-style load awareness:
+    queue wait joins the latency score, spreading concurrent workflows."""
+    placement: Dict[str, str] = {}
+    considered = 0
+    objective = 0.0
+    cloud = next((n.id for n in graph.nodes.values()
+                  if n.kind == wf.sink_kind), entry_node)
+    order = wf.topo_order()
+    for idx, f in enumerate(order):
+        preds = wf.predecessors(f)
+        anchor = placement.get(preds[0]) if preds else entry_node
+        anchor = anchor or entry_node
+        is_sink = idx == len(order) - 1 and wf.sink_kind
+        cands = [cloud] if is_sink and cloud in graph.nodes else \
+            [n for n in vicinity(graph, anchor, radius_s)
+             if graph.nodes[n].kind in compute_kinds]
+        considered += len(cands)
+        best, best_cost = None, math.inf
+        d = wf.demands[f]
+        for n in cands:
+            node = graph.nodes.get(n)
+            if node is None:
+                continue
+            # R-1 / R-2 / R-3 on the incremental placement
+            if node.mem_used + d.mem > node.mem or \
+                    node.cpu_used + d.cpu > node.cpu or \
+                    node.power_used + d.power > node.power_avail:
+                continue
+            if node.kind == SAT and \
+                    node.t_orb + node.temp_extra + d.t_exc > node.t_max:
+                continue
+            # R-4: handoff SLO from every placed predecessor
+            cost = 0.0
+            ok = True
+            for p in preds:
+                src = placement.get(p)
+                if src is None:
+                    continue
+                _, lat = graph.dijkstra(src, n)
+                if lat > slo.max_handoff_s:
+                    ok = False
+                    break
+                cost += lat + locality_penalty(graph, src, n, gamma_per_hop)
+            if not ok:
+                continue
+            if busy is not None:
+                cost += busy_weight * max(busy.get(n, 0.0) - now, 0.0)
+            if cost < best_cost:
+                best, best_cost = n, cost
+        if best is None:
+            # R-6 requires a placement: fall back to the anchor
+            best, best_cost = anchor, slo.max_handoff_s
+        placement[f] = best
+        objective += best_cost
+        node = graph.nodes.get(best)
+        if node is not None:
+            node.mem_used += d.mem
+            node.cpu_used += d.cpu
+            node.power_used += d.power
+            if node.kind == SAT:
+                node.temp_extra += d.t_exc
+    return Plan(placement, objective, considered)
+
+
+# ---------------------------------------------------------------------------
+# TPU bridge: Eq. 9 over the mesh topology
+# ---------------------------------------------------------------------------
+ICI_BW = 50e9          # bytes/s per link (v5e)
+DCN_BW = 6.25e9        # bytes/s per host pair across pods (assumed 50 Gb/s)
+ICI_LAT = 1e-6
+DCN_LAT = 10e-6
+
+
+def mesh_topology(mesh) -> TopologyGraph:
+    """ICI graph of the production mesh: chips are nodes, torus neighbors
+    are links; the pod axis crosses DCN."""
+    from repro.core.topology import Node
+    g = TopologyGraph()
+    shape = dict(mesh.shape)
+    pods = shape.get("pod", 1)
+    rows, cols = shape["data"], shape["model"]
+    for p in range(pods):
+        for r in range(rows):
+            for c in range(cols):
+                g.add_node(Node(f"chip{p}_{r}_{c}", "chip"))
+    for p in range(pods):
+        for r in range(rows):
+            for c in range(cols):
+                me = f"chip{p}_{r}_{c}"
+                g.add_link(me, f"chip{p}_{(r + 1) % rows}_{c}",
+                           ICI_LAT, ICI_BW)
+                g.add_link(me, f"chip{p}_{r}_{(c + 1) % cols}",
+                           ICI_LAT, ICI_BW)
+                if pods > 1:
+                    g.add_link(me, f"chip{(p + 1) % pods}_{r}_{c}",
+                               DCN_LAT, DCN_BW)
+    return g
+
+
+@dataclass
+class LayoutCandidate:
+    name: str
+    overrides: dict                       # logical-axis rule overrides
+    est_collective_bytes: Dict[str, float] = field(default_factory=dict)
+
+
+def score_layout(cand: LayoutCandidate, mesh) -> float:
+    """Eq. 9 analogue: sum over state edges of bytes/bw across the axis the
+    state moves on.  ``est_collective_bytes`` maps mesh-axis -> bytes moved
+    per step on that axis."""
+    shape = dict(mesh.shape)
+    pods = shape.get("pod", 1)
+    total = 0.0
+    for axis, nbytes in cand.est_collective_bytes.items():
+        if axis == "pod":
+            bw, n = DCN_BW, pods
+        else:
+            bw, n = ICI_BW, shape.get(axis, 1)
+        if n <= 1 or nbytes <= 0:
+            continue
+        # ring cost: (n-1)/n of the bytes traverse each link
+        total += (nbytes * (n - 1) / n) / bw
+    return total
+
+
+def plan_mesh_layout(candidates: Sequence[LayoutCandidate], mesh
+                     ) -> LayoutCandidate:
+    return min(candidates, key=lambda c: score_layout(c, mesh))

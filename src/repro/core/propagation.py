@@ -1,0 +1,146 @@
+"""Databelt function-state propagation: Identify / Compute / Offload
+(paper Algorithms 1, 2, 3 — implemented verbatim).
+
+Identify prunes the topology to nodes available at time t; Compute walks the
+*reversed* Dijkstra path from the executing node to the workflow's
+destination and picks the first candidate whose migration time
+``t_mig = l_C + |k|/b + l_C`` meets ``t_max``; Offload pushes the state
+there (falling back to the source when the target became unavailable).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.keys import StateKey
+from repro.core.slo import SLO
+from repro.core.topology import TopologyGraph
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: Identify
+# ---------------------------------------------------------------------------
+def identify(graph: TopologyGraph, available: Callable[[str, float], bool],
+             t: float) -> TopologyGraph:
+    """Prune to nodes with a_n(t) = 1 and links between them."""
+    pruned = TopologyGraph()
+    for nid, node in graph.nodes.items():
+        if available(nid, t):
+            pruned.add_node(node)
+    for src, nbrs in graph.adj.items():
+        if src not in pruned.nodes:
+            continue
+        for dst, link in nbrs.items():
+            if dst in pruned.nodes:
+                pruned.adj.setdefault(src, {})[dst] = link
+    return pruned
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: Compute
+# ---------------------------------------------------------------------------
+def compute(graph: TopologyGraph, src: str, dst: str, data_size: float,
+            t_max: float) -> Tuple[str, List[str]]:
+    """Select the propagation target node n_C.
+
+    Walks the reversed lowest-latency path (destination-first) and returns
+    the first candidate whose migration time fits ``t_max``; falls back to
+    the source node when none qualifies.  Returns (n_C, path src->dst).
+    """
+    path, _ = graph.dijkstra(src, dst)
+    if not path:
+        return src, [src]
+    for cand in reversed(path):
+        if cand == src:
+            continue
+        l_c = _path_latency_to(graph, path, cand)
+        b = _path_bandwidth_to(graph, path, cand)
+        t_mig = l_c + (data_size / b if b > 0 else math.inf) + l_c
+        if t_mig > t_max:
+            continue
+        return cand, path
+    return src, path
+
+
+def _path_latency_to(graph: TopologyGraph, path: List[str],
+                     cand: str) -> float:
+    lat = 0.0
+    for a, b in zip(path, path[1:]):
+        lat += graph.latency(a, b)
+        if b == cand:
+            break
+    return lat
+
+
+def _path_bandwidth_to(graph: TopologyGraph, path: List[str],
+                       cand: str) -> float:
+    bw = math.inf
+    for a, b in zip(path, path[1:]):
+        link = graph.adj.get(a, {}).get(b)
+        bw = min(bw, link.bandwidth if link else 0.0)
+        if b == cand:
+            break
+    return bw
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3: Offload
+# ---------------------------------------------------------------------------
+def offload(graph: TopologyGraph, host: str, target: str,
+            available: Callable[[str, float], bool], t: float) -> str:
+    """Final placement node for the produced state: pre-selected target if
+    it is still available at t, else the executor itself."""
+    if target in graph.nodes and available(target, t):
+        return target
+    return host
+
+
+# ---------------------------------------------------------------------------
+# Facade used by the serverless runtime & the TPU planner
+# ---------------------------------------------------------------------------
+@dataclass
+class PlacementDecision:
+    function_id: str
+    source: str
+    target: str
+    path: List[str]
+    t_mig: float
+
+
+class Databelt:
+    """Control-plane service: precomputes placement decisions (Identify +
+    Compute), which the data plane retrieves at Offload time (paper §4.1:
+    decisions are precomputed so function execution is unaffected)."""
+
+    def __init__(self, graph_fn: Callable[[float], TopologyGraph],
+                 available: Callable[[str, float], bool],
+                 slo: SLO = SLO()):
+        self.graph_fn = graph_fn
+        self.available = available
+        self.slo = slo
+        self._decisions: Dict[str, PlacementDecision] = {}
+
+    # -- Identify + Compute (control plane, ahead of execution) ----------
+    def plan_state_placement(self, function_id: str, host: str, dst: str,
+                             data_size: float, t: float) -> PlacementDecision:
+        graph = identify(self.graph_fn(t), self.available, t)
+        target, path = compute(graph, host, dst, data_size,
+                               self.slo.max_migration_s)
+        l_c = _path_latency_to(graph, path, target) if target != host else 0.0
+        bw = _path_bandwidth_to(graph, path, target) if target != host \
+            else math.inf
+        t_mig = 0.0 if target == host else \
+            l_c + data_size / bw + l_c
+        dec = PlacementDecision(function_id, host, target, path, t_mig)
+        self._decisions[function_id] = dec
+        return dec
+
+    # -- Offload (data plane, at function completion) --------------------
+    def offload_state(self, function_id: str, host: str, t: float,
+                      key: StateKey) -> StateKey:
+        dec = self._decisions.get(function_id)
+        graph = identify(self.graph_fn(t), self.available, t)
+        target = dec.target if dec else host
+        final = offload(graph, host, target, self.available, t)
+        return key.moved(final)

@@ -1,0 +1,125 @@
+"""Network topology model: G = (N, L) with time-varying availability.
+
+Nodes are edge/cloud/satellite/drone/EO/ground-station; links carry latency
+(seconds) and bandwidth (bytes/s).  ``dijkstra`` returns the lowest-latency
+path — the primitive underneath Databelt's Compute phase (Algorithm 2).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+CLOUD, EDGE, SAT, DRONE, EO, GROUND = \
+    "cloud", "edge", "satellite", "drone", "eo", "ground"
+
+
+@dataclass
+class Node:
+    id: str
+    kind: str
+    cpu: float = 4.0            # cores
+    mem: float = 8e9            # bytes
+    power_avail: float = 100.0  # watts available for payload
+    t_orb: float = 20.0         # baseline temperature (C)
+    t_max: float = 85.0         # max operational temperature
+    position: Optional[Callable] = None   # t -> (x, y, z) meters ECI
+    # dynamic state
+    mem_used: float = 0.0
+    cpu_used: float = 0.0
+    power_used: float = 0.0
+    temp_extra: float = 0.0
+
+    def pos(self, t: float):
+        if self.position is None:
+            return (0.0, 0.0, 0.0)
+        return self.position(t)
+
+
+@dataclass
+class Link:
+    src: str
+    dst: str
+    latency: float              # seconds (one-way)
+    bandwidth: float            # bytes/s
+
+
+class TopologyGraph:
+    """Snapshot (or time-parameterized view) of the 3D continuum network."""
+
+    def __init__(self):
+        self.nodes: Dict[str, Node] = {}
+        self.adj: Dict[str, Dict[str, Link]] = {}
+
+    def add_node(self, node: Node):
+        self.nodes[node.id] = node
+        self.adj.setdefault(node.id, {})
+
+    def add_link(self, src: str, dst: str, latency: float, bandwidth: float,
+                 bidirectional: bool = True):
+        self.adj.setdefault(src, {})[dst] = Link(src, dst, latency, bandwidth)
+        if bidirectional:
+            self.adj.setdefault(dst, {})[src] = Link(dst, src, latency,
+                                                     bandwidth)
+
+    def remove_node(self, nid: str):
+        self.nodes.pop(nid, None)
+        self.adj.pop(nid, None)
+        for a in self.adj.values():
+            a.pop(nid, None)
+
+    def neighbors(self, nid: str):
+        return self.adj.get(nid, {})
+
+    def latency(self, src: str, dst: str) -> float:
+        if src == dst:
+            return 0.0
+        link = self.adj.get(src, {}).get(dst)
+        return link.latency if link else math.inf
+
+    # ------------------------------------------------------------------
+    def dijkstra(self, src: str, dst: str) -> Tuple[List[str], float]:
+        """Lowest-latency path src -> dst.  Returns (path, total_latency);
+        ([], inf) when unreachable."""
+        if src == dst:
+            return [src], 0.0
+        dist = {src: 0.0}
+        prev: Dict[str, str] = {}
+        pq = [(0.0, src)]
+        seen = set()
+        while pq:
+            d, u = heapq.heappop(pq)
+            if u in seen:
+                continue
+            if u == dst:
+                break
+            seen.add(u)
+            for v, link in self.adj.get(u, {}).items():
+                if v in seen or v not in self.nodes:
+                    continue
+                nd = d + link.latency
+                if nd < dist.get(v, math.inf):
+                    dist[v] = nd
+                    prev[v] = u
+                    heapq.heappush(pq, (nd, v))
+        if dst not in dist:
+            return [], math.inf
+        path = [dst]
+        while path[-1] != src:
+            path.append(prev[path[-1]])
+        path.reverse()
+        return path, dist[dst]
+
+    def path_latency(self, path: List[str]) -> float:
+        return sum(self.latency(a, b) for a, b in zip(path, path[1:]))
+
+    def hops(self, src: str, dst: str) -> int:
+        path, lat = self.dijkstra(src, dst)
+        return max(len(path) - 1, 0) if math.isfinite(lat) else 10**9
+
+    def copy_shallow(self) -> "TopologyGraph":
+        g = TopologyGraph()
+        g.nodes = dict(self.nodes)
+        g.adj = {k: dict(v) for k, v in self.adj.items()}
+        return g

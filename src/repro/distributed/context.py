@@ -1,0 +1,68 @@
+"""Distribution context: logical-axis sharding rules threaded through models.
+
+Models annotate tensors with *logical* axes (``"batch"``, ``"seq"``,
+``"heads"``, ``"kv_heads"``, ``"embed"``, ``"ff"``, ``"experts"``, ``"vocab"``,
+``"kv_seq"``...).  The active :class:`ShardingRules` maps logical axes to mesh
+axes; outside any context the annotations are no-ops so the same model code
+runs on a laptop and on a 512-chip mesh.
+
+The Databelt planner (``core/planner.py``) *produces* these rules — the rule
+set is the "state placement decision" of the paper, lowered into XLA sharding
+constraints.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+class ShardingRules:
+    """Maps logical axis names to mesh axis names (or None)."""
+
+    def __init__(self, mesh: Mesh, rules: dict, moe_axis: str = "model"):
+        self.mesh = mesh
+        self.rules = dict(rules)
+        self.moe_axis = moe_axis          # mesh axis carrying experts
+        self.data_axes = rules.get("batch")
+
+    def spec(self, logical: tuple) -> P:
+        return P(*[self.rules.get(ax) if ax else None for ax in logical])
+
+    def sharding(self, logical: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+def current() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def constrain(x, logical: tuple):
+    """Apply a sharding constraint expressed in logical axes (no-op without
+    an active rule set)."""
+    r = current()
+    if r is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, r.sharding(logical))
+
+
+def axis_size(mesh_axis: str) -> int:
+    r = current()
+    if r is None:
+        return 1
+    return r.mesh.shape.get(mesh_axis, 1)

@@ -1,0 +1,233 @@
+"""Layout selection: maps logical tensor axes onto the production mesh.
+
+This is where the Databelt planner's *placement decision* becomes concrete:
+``choose_layout`` consumes the topology (mesh) + workload (arch x shape) and
+emits the sharding rule set (see ``core/planner.py`` for the SLO-aware
+selection among candidate layouts).  Heuristics:
+
+* TP shards heads/ff/vocab over ``model`` when divisible; GQA KV heads are
+  replicated when ``n_kv_heads`` does not divide the model axis (standard
+  Megatron GQA practice).
+* Archs with fewer heads than the model axis (gemma3: 4) keep attention
+  replicated over ``model`` and use it for ff/rnn instead.
+* Decode shapes shard the KV-cache sequence over ``model`` (distributed
+  flash-decode: softmax stats all-reduce) — uniform across archs, no
+  divisibility hazards, and it is what makes ``long_500k`` (batch=1) fit.
+* Optimizer state is additionally sharded over ``data`` (ZeRO-style).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.context import ShardingRules
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def choose_layout(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                  overrides: dict | None = None) -> ShardingRules:
+    tp = mesh.shape["model"]
+    da = data_axes(mesh)
+    dsize = 1
+    for a in da:
+        dsize *= mesh.shape[a]
+
+    heads_ok = cfg.n_heads % tp == 0
+    flat_ok = (cfg.n_heads * cfg.head_dim) % tp == 0
+    kv_ok = cfg.n_kv_heads % tp == 0
+    vocab_ok = cfg.vocab_size % tp == 0
+
+    rules = {
+        "batch": da if shape.global_batch % dsize == 0 else None,
+        "seq": None,
+        # Megatron-SP: residual stream sharded over model between layers
+        "act_seq": "model" if shape.kind != "decode" else None,
+        "heads": "model" if heads_ok else None,
+        "heads_flat": "model" if flat_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        "ff": "model",
+        "vocab": "model" if vocab_ok else None,
+        "embed_d": "model",
+        "experts": "model",
+        "moe_ff": "data",      # FSDP dim of expert weights (ZeRO-3)
+        "rnn": "model",
+        "kv_seq": "model",
+    }
+    if rules["batch"] is None:
+        # batch too small (long_500k): shard sequence over the data axes
+        rules["seq"] = da
+    if overrides:
+        rules.update(overrides)
+    return ShardingRules(mesh, rules, moe_axis="model")
+
+
+# ---------------------------------------------------------------------------
+# parameter partitioning (by key path)
+# ---------------------------------------------------------------------------
+_LAST = {"wq", "w_gate", "w_up", "wk", "wv", "wr", "wg", "w_y", "w_x",
+         "conv_w", "conv_b", "lam", "ba", "bi", "wa", "wi"}
+_SECOND_LAST = {"wo", "w_down", "w_out"}
+_REPL = {"ln1", "ln2", "ln_x", "post_ln1", "post_ln2", "final_norm",
+         "enc_norm", "q_norm", "k_norm", "router", "mu", "mu_x", "mu_k",
+         "mu_r", "tm_w1", "tm_w2", "w0", "dw1", "dw2", "lnx_s", "lnx_b",
+         "frontend_proj"}
+
+
+def _leaf_logical(path: tuple, leaf_ndim: int, cfg: ModelConfig,
+                  stacked: bool) -> tuple:
+    keys = [getattr(p, "key", getattr(p, "name", str(getattr(p, "idx", p))))
+            for p in path]
+    name = keys[-1]
+    joined = "/".join(str(k) for k in keys)
+    lead = ("layers",) if stacked else ()  # placeholder; layers dim -> None
+
+    def at(dim_from_end: int, ax: str) -> tuple:
+        logical = [None] * leaf_ndim
+        logical[leaf_ndim - 1 - dim_from_end] = ax
+        return tuple(logical)
+
+    if name == "embed" and not cfg.tie_embeddings:
+        # untied: shard the table on the embedding dim — the token gather
+        # then stays local per shard and its scatter-grad stays sharded
+        return (None, "embed_d")
+    if name in ("embed", "lm_head"):
+        return ("vocab", None)
+    if name in _REPL:
+        return (None,) * leaf_ndim
+    moe_expert = "moe" in joined and "dense" not in joined
+    if moe_expert and name in ("w_gate", "w_up", "w_down"):
+        # (R?, E, d, f): experts over model; the expert-ff dim additionally
+        # over data (FSDP / ZeRO-3) — 470GB..960GB of expert weights only
+        # fit HBM when sharded over the full 256-chip pod
+        logical = [None] * leaf_ndim
+        logical[leaf_ndim - 3] = "experts"
+        logical[leaf_ndim - (1 if name != "w_down" else 2)] = "moe_ff"
+        return tuple(logical)
+    if name == "u":
+        return at(1, "heads")
+    if "attn" in joined or "xattn" in joined:
+        if name == "wq":
+            return at(0, "heads_flat")
+        if name in ("wk", "wv"):
+            return at(0, "kv_heads_flat")
+        if name == "wo":
+            return at(1, "heads_flat")
+    if "rec" in joined:
+        ax = "rnn"
+        if name in _SECOND_LAST:
+            return at(1, ax)
+        return at(0, ax)
+    if "tm" in joined.split("/") or any(k == "tm" for k in map(str, keys)):
+        if name in ("wr", "wk", "wv", "wg"):
+            return at(0, "heads_flat")
+        if name == "wo":
+            return at(1, "heads_flat")
+    if "cm" in map(str, keys):
+        if name == "wk":
+            return at(0, "ff")
+        if name == "wv":
+            return at(1, "ff")
+        if name == "wr":
+            return (None,) * leaf_ndim
+    if name in _SECOND_LAST:
+        return at(1, "ff")
+    if name in _LAST:
+        return at(0, "ff")
+    return (None,) * leaf_ndim
+
+
+def param_pspecs(abstract_params, cfg: ModelConfig, rules: ShardingRules):
+    """PartitionSpec tree matching the params tree."""
+    r = dict(rules.rules)
+    r.setdefault("kv_heads_flat", r.get("kv_heads"))
+    r.setdefault("heads_flat", r.get("heads"))
+
+    def spec_for(path, leaf):
+        stacked = any(str(getattr(p, "key", "")) == "blocks" for p in path)
+        logical = _leaf_logical(path, leaf.ndim, cfg, stacked)
+        return P(*[r.get(ax) if ax else None for ax in logical])
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_params)
+
+
+def opt_pspecs(param_specs, abstract_params, mesh: Mesh):
+    """ZeRO: additionally shard optimizer-state copies over ``data``."""
+    dsize = mesh.shape["data"]
+
+    def extend(path, spec, leaf):
+        used = {a for s in spec if s for a in
+                ((s,) if isinstance(s, str) else s)}
+        if "data" in used:
+            return spec
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, (s, n) in enumerate(zip(dims, leaf.shape)):
+            if s is None and n % dsize == 0 and n >= dsize:
+                dims[i] = "data"
+                return P(*dims)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, s, l: extend(p, s, l), param_specs, abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+def batch_pspecs(batch_abs, rules: ShardingRules):
+    b = rules.rules.get("batch")
+    s = rules.rules.get("seq")
+
+    def spec(path, leaf):
+        if leaf.ndim >= 2:
+            return P(*((b, s) + (None,) * (leaf.ndim - 2)))
+        return P(b)
+
+    return jax.tree_util.tree_map_with_path(spec, batch_abs)
+
+
+def cache_pspecs(cache_abs, cfg: ModelConfig, rules: ShardingRules,
+                 stacked: bool = True):
+    """KV caches: batch over data, sequence over ``model`` (flash-decode);
+    recurrent states: batch over data, heads/rnn over ``model``."""
+    b = rules.rules.get("batch")
+    kvseq = rules.rules.get("kv_seq", "model")
+    seq_extra = rules.rules.get("seq")  # set when batch unshardable
+
+    def spec(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        off = 1 if (stacked and "blocks" in keys) else 0
+        nd = leaf.ndim - off
+        lead = (None,) * off
+        if name in ("k", "v", "ck", "cv", "ksc", "vsc"):  # (B,S,K,hd?)
+            sq = tuple(a for a in ((kvseq,) if isinstance(kvseq, str)
+                                   else tuple(kvseq or ())))
+            if b is None and seq_extra:
+                ex = seq_extra if isinstance(seq_extra, tuple) else (seq_extra,)
+                sq = tuple(ex) + sq
+            tail_dims = (None,) * (nd - 2)
+            return P(*(lead + (b, sq if sq else None) + tail_dims))
+        if name == "state":                      # (B, H, hd, hd)
+            return P(*(lead + (b, "model", None, None)))
+        if name in ("tm_x", "cm_x"):             # (B, D)
+            return P(*(lead + (b, "model")))
+        if name == "h":                          # (B, dr)
+            return P(*(lead + (b, "model")))
+        if name == "conv":                       # (B, cw-1, dr)
+            return P(*(lead + (b, None, "model")))
+        return P(*(lead + (None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_abs)
+
+
+def to_shardings(pspec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

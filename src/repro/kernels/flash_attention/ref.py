@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, scale: float, softcap: float = 0.0,
+                        window: int = 0, causal: bool = True):
+    """q: (BK, Sq, G, hd); k,v: (BK, Skv, hd) -> (BK, Sq, G, hd)."""
+    BK, Sq, G, hd = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bsgd,btd->bsgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        q_pos = jnp.arange(Sq)[:, None]
+        kv_pos = jnp.arange(Skv)[None, :]
+        allow = kv_pos <= q_pos
+        if window:
+            allow &= kv_pos > q_pos - window
+        s = jnp.where(allow[None, :, None, :], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bsgt,btd->bsgd", a, v.astype(jnp.float32))
+    return o.astype(q.dtype)

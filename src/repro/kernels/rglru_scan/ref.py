@@ -1,0 +1,15 @@
+"""Oracle: associative scan for h_t = a_t h_{t-1} + b_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel for the RWKV-6 (Finch) wkv recurrence, chunkwise.
+
+TPU adaptation of the CUDA wkv kernel: instead of one thread per channel
+scanning time steps, the recurrence is reformulated as chunk-local matmuls
+(MXU work) with the (hd x hd) state carried across the chunk-grid dimension
+in VMEM scratch.  Intra-chunk pairwise decays use the tile-factored log-space
+form (see models/rwkv.py) so f32 never overflows.
+
+Layout: r,k,v,logw: (BH, S, hd) f32; grid (BH, S/c); state scratch (hd, hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _intra(rc, kc, vc, lp, lp_prev, u, c: int, tile: int):
+    nt = c // tile
+    hd = rc.shape[-1]
+    shp = (nt, tile, hd)
+    lp_t = lp.reshape(shp)
+    lpp_t = lp_prev.reshape(shp)
+    ts = lp_t[:, 0, :]
+    te = lp_t[:, -1, :]
+    r_f = rc.reshape(shp) * jnp.exp(lpp_t - ts[:, None, :])
+    k_f = kc.reshape(shp) * jnp.exp(te[:, None, :] - lp_t)
+    mid = ts[:, None, :] - te[None, :, :]
+    tmask = jnp.arange(nt)[:, None] > jnp.arange(nt)[None, :]
+    mid = jnp.where(tmask[..., None], mid, -jnp.inf)
+    A_off = jnp.einsum("Tti,TSi,Ssi->TtSs", r_f, jnp.exp(mid), k_f)
+    expo = lpp_t[:, :, None, :] - lp_t[:, None, :, :]
+    dmask = jnp.arange(tile)[:, None] > jnp.arange(tile)[None, :]
+    expo = jnp.where(dmask[..., None], expo, -jnp.inf)
+    A_diag = jnp.einsum("Tti,Ttsi->Tts", rc.reshape(shp),
+                        jnp.exp(expo) * kc.reshape(shp)[:, None, :, :])
+    eyeT = jnp.eye(nt, dtype=A_off.dtype)
+    A = (A_off + jnp.einsum("Tts,TS->TtSs", A_diag, eyeT)).reshape(c, c)
+    y = A @ vc
+    diag_bonus = jnp.einsum("ti,ti->t", rc, u[None, :] * kc)
+    return y + diag_bonus[:, None] * vc
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, st_scr, *,
+                c: int, tile: int, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_scr[...] = jnp.zeros_like(st_scr)
+
+    rc = r_ref[0]
+    kc = k_ref[0]
+    vc = v_ref[0]
+    wc = w_ref[0]
+    u = u_ref[0]
+    lp = jnp.cumsum(wc, axis=0)
+    lp_prev = lp - wc
+    y = _intra(rc, kc, vc, lp, lp_prev, u, c, tile)
+    st = st_scr[...]
+    y = y + (rc * jnp.exp(lp_prev)) @ st
+    k_out = kc * jnp.exp(lp[-1:, :] - lp)
+    st_scr[...] = jnp.exp(lp[-1, :])[:, None] * st + k_out.T @ vc
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "tile", "interpret"))
+def wkv6_chunked(r, k, v, logw, u, *, chunk: int = 64, tile: int = 8,
+                 interpret: bool = True):
+    """r,k,v,logw: (BH, S, hd) f32; u: (BH, hd) -> y (BH, S, hd)."""
+    BH, S, hd = r.shape
+    c = min(chunk, S)
+    assert S % c == 0 and c % tile == 0, (S, c, tile)
+    nc = S // c
+    kernel = functools.partial(_wkv_kernel, c=c, tile=tile, nc=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, hd), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

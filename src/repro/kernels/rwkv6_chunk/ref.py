@@ -1,0 +1,26 @@
+"""Exact sequential oracle for the wkv6 kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """r,k,v,logw: (BH, S, hd) f32; u: (BH, hd) -> y (BH, S, hd).
+
+    y_t = r_t^T (S_{t-1} + diag(u*k_t) v_t^T);  S_t = diag(w_t) S_{t-1}
+        + k_t v_t^T
+    """
+    BH, S, hd = r.shape
+
+    def step(st, xs):
+        rt, kt, vt, wt = xs                      # (BH, hd) each
+        kv = kt[..., :, None] * vt[..., None, :]
+        yt = jnp.einsum("bi,bij->bj", rt, st + u[..., :, None] * kv)
+        st = jnp.exp(wt)[..., :, None] * st + kv
+        return st, yt
+
+    st0 = jnp.zeros((BH, hd, hd), jnp.float32)
+    xs = tuple(t.transpose(1, 0, 2) for t in (r, k, v, logw))
+    _, ys = jax.lax.scan(step, st0, xs)
+    return ys.transpose(1, 0, 2)

@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real step function (train_step for train
+shapes, prefill/decode steps for serving shapes) with production shardings,
+lowers + compiles it against ShapeDtypeStruct inputs (no allocation), and
+records memory_analysis / cost_analysis / HLO collective bytes to JSON.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-20b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+    ... --calibrate     # also compile R=1/R=2 calibration models (roofline)
+"""
+import argparse
+import json
+import time
+import traceback
+from dataclasses import replace
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (LM_SHAPES, ModelConfig, ShapeConfig,
+                                get_config, list_archs, shapes_for)
+from repro.distributed import context as dctx
+from repro.distributed.layouts import (batch_pspecs, cache_pspecs,
+                                       choose_layout, opt_pspecs,
+                                       param_pspecs, to_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models import init_params, init_cache
+from repro.models.io import batch_specs, decode_specs
+from repro.optim import cosine_schedule, make_optimizer
+from repro.roofline.hlo import collective_stats, op_census
+from repro.serving.steps import build_decode_step, build_prefill_step
+from repro.train.steps import build_train_step, init_train_state
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _opt_state_pspecs(abstract_opt, abstract_params, pspecs, mesh):
+    z = opt_pspecs(pspecs, abstract_params, mesh)
+    out = {}
+    for k, sub in abstract_opt.items():
+        if k in ("m", "v", "master"):
+            out[k] = z
+        elif k == "vs":
+            def vspec(path, leaf, *, _z=z, _p=abstract_params):
+                # leaf is vr (shape[:-1]) / vc (shape[:-2]+[-1]) / v (shape)
+                return P()  # replaced below
+            # derive per-param factored specs
+            def per_param(ps, p, vs):
+                dims = list(ps) + [None] * (p.ndim - len(ps))
+                if "vr" in vs:
+                    return {"vr": P(*dims[:-1]), "vc": P(*(dims[:-2] + dims[-1:]))}
+                return {"v": P(*dims)}
+            out[k] = jax.tree.map(
+                per_param, z, abstract_params, sub,
+                is_leaf=lambda x: isinstance(x, P))
+        else:
+            out[k] = jax.tree.map(lambda _: P(), sub)
+    return out
+
+
+TRAIN_GRAD_ACCUM = 4
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+               grad_accum: int = TRAIN_GRAD_ACCUM):
+    """Returns (fn, abstract_args, in_shardings, out_shardings, donate)."""
+    if shape.kind == "train":
+        opt0 = make_optimizer(cfg.optimizer)
+        lr = cosine_schedule(3e-4, 100, 10_000)
+        state_abs = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(0), cfg, opt0))
+        pspecs = param_pspecs(state_abs["params"], cfg, rules)
+        gspecs = opt_pspecs(pspecs, state_abs["params"], mesh)
+        gshard = to_shardings(gspecs, mesh)
+        opt = make_optimizer(cfg.optimizer, update_constraint=gshard)
+        step_fn = build_train_step(
+            cfg, opt, lr, grad_accum=grad_accum, grad_shardings=gshard)
+        state_specs = {
+            "params": pspecs,
+            "opt": _opt_state_pspecs(state_abs["opt"], state_abs["params"],
+                                     pspecs, mesh),
+            "step": P(),
+        }
+        batch_abs = batch_specs(cfg, shape)
+        bspecs = batch_pspecs(batch_abs, rules)
+        in_sh = (to_shardings(state_specs, mesh), to_shardings(bspecs, mesh))
+        out_sh = (to_shardings(state_specs, mesh), None)
+        return step_fn, (state_abs, batch_abs), in_sh, out_sh, (0,)
+
+    params_abs = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = param_pspecs(params_abs, cfg, rules)
+
+    if shape.kind == "prefill":
+        step_fn = build_prefill_step(cfg)
+        batch_abs = batch_specs(cfg, shape)
+        bspecs = batch_pspecs(batch_abs, rules)
+        cache_abs = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+        cspecs = cache_pspecs(cache_abs, cfg, rules)
+        tok_spec = P(rules.rules.get("batch"))
+        in_sh = (to_shardings(pspecs, mesh), to_shardings(bspecs, mesh))
+        out_sh = (NamedSharding(mesh, tok_spec), to_shardings(cspecs, mesh))
+        return step_fn, (params_abs, batch_abs), in_sh, out_sh, ()
+
+    # decode
+    step_fn = build_decode_step(cfg)
+    dspec = decode_specs(cfg, shape)
+    cache_abs = dspec["cache"]
+    cspecs = cache_pspecs(cache_abs, cfg, rules)
+    b = rules.rules.get("batch")
+    in_sh = (to_shardings(pspecs, mesh),
+             to_shardings(cspecs, mesh),
+             NamedSharding(mesh, P(b, None)),
+             NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, P(b, None)), to_shardings(cspecs, mesh))
+    abstract = (params_abs, cache_abs, dspec["tokens"], dspec["pos"])
+    return step_fn, abstract, in_sh, out_sh, (1,)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             cfg_override=None, tag: str = "",
+             grad_accum: int = TRAIN_GRAD_ACCUM) -> dict:
+    cfg = cfg_override or get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = choose_layout(cfg, shape, mesh)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multipod" if multi_pod else "pod",
+           "kind": shape.kind, "tag": tag,
+           "n_chips": mesh.devices.size}
+    t0 = time.time()
+    with dctx.use_rules(rules):
+        fn, abstract, in_sh, out_sh, donate = build_cell(cfg, shape, mesh,
+                                                         rules,
+                                                         grad_accum=grad_accum)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*abstract)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_gb": ma.argument_size_in_bytes / 1e9,
+        "output_gb": ma.output_size_in_bytes / 1e9,
+        "alias_gb": ma.alias_size_in_bytes / 1e9,
+        "temp_gb": ma.temp_size_in_bytes / 1e9,
+        "peak_gb": (ma.argument_size_in_bytes + ma.output_size_in_bytes +
+                    ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 1e9,
+    }
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    rec["cost"] = {
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0) or
+                                ca.get("bytes accessed{}", 0.0)),
+    }
+    txt = compiled.as_text()
+    rec["collectives"] = collective_stats(txt)
+    rec["hlo_ops"] = dict(op_census(txt, top=12))
+    rec["hlo_len"] = len(txt)
+    print(json.dumps({k: rec[k] for k in
+                      ("arch", "shape", "mesh", "lower_s", "compile_s")}),
+          flush=True)
+    return rec
+
+
+def calibration_cells(arch: str) -> list:
+    """Two calibration configs for the scan-body roofline correction:
+    cal1 = scan(1 superblock) + no tail; cal2 = scan(1) + 1 unrolled
+    superblock as tail.  cost(cal2) - cost(cal1) = exact per-superblock cost
+    (fwd+bwd+remat+collectives, at full width/batch/seq)."""
+    cfg = get_config(arch)
+    pat = cfg.pattern_len
+    c1 = replace(cfg, n_layers=pat, scan_reps_cap=1)
+    c2 = replace(cfg, n_layers=2 * pat, scan_reps_cap=1)
+    return [("cal1", c1), ("cal2", c2)]
+
+
+def _save(rec: dict):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+    if rec.get("tag"):
+        name += f"__{rec['tag']}"
+    (OUT_DIR / f"{name}.json").write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="compile cal1/cal2 scan-correction variants too")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    meshes = [False, True] if args.mesh == "both" else \
+        [args.mesh == "multipod"]
+    failures = []
+    for arch in archs:
+        shapes = [s.name for s in shapes_for(arch)]
+        if args.shape:
+            shapes = [args.shape]
+        for sn in shapes:
+            for mp in meshes:
+                name = f"{arch}__{sn}__{'multipod' if mp else 'pod'}"
+                if args.skip_existing and (OUT_DIR / f"{name}.json").exists():
+                    print("skip", name)
+                    continue
+                try:
+                    rec = run_cell(arch, sn, mp)
+                    _save(rec)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append((name, repr(e)[:200]))
+                    continue
+                if args.calibrate and not mp:
+                    for tag, ccfg in calibration_cells(arch):
+                        cname = f"{name}__{tag}"
+                        if args.skip_existing and \
+                                (OUT_DIR / f"{cname}.json").exists():
+                            continue
+                        try:
+                            rec = run_cell(arch, sn, mp, cfg_override=ccfg,
+                                           tag=tag)
+                            _save(rec)
+                        except Exception as e:  # noqa: BLE001
+                            traceback.print_exc()
+                            failures.append((cname, repr(e)[:200]))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("dry-run complete: all cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh builders (functions — importing never touches devices)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (v5e pod).  Multi-pod: 2 pods = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 2, model: int = 4):
+    """Small mesh over however many (possibly forced-host) devices exist."""
+    n = len(jax.devices())
+    if data * model > n:
+        data, model = 1, n
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

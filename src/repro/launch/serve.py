@@ -1,0 +1,47 @@
+"""Serving launcher: ``PYTHONPATH=src python -m repro.launch.serve
+--arch <id> [--requests N] [--slots K]`` — continuous-batching engine over
+the reduced config (CPU) or the full config on a real fleet.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, get_smoke_config, list_archs
+from repro.models import init_params
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b", choices=list_archs())
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, n_slots=args.slots,
+                        max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        prompt = rng.integers(2, cfg.vocab_size,
+                              size=int(rng.integers(3, 9)))
+        eng.submit(Request(i, prompt.astype(np.int32),
+                           max_new=args.max_new))
+    done = eng.run_until_done()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens_out) for r in done)
+    print(f"{len(done)} requests, {toks} tokens, {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models.transformer import (  # noqa: F401
+    init_params,
+    forward_train,
+    forward_prefill,
+    forward_decode,
+    init_cache,
+)

@@ -1,0 +1,87 @@
+"""Input/cache ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+``input_specs()`` is the dry-run contract: weak-type-correct, shardable,
+no device allocation.  Labels use -1 for ignored positions (modality
+prefixes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, batch: int | None = None,
+                seq: int | None = None) -> dict:
+    """Model inputs for a train/prefill step (token batch + stub frontends)."""
+    B = batch if batch is not None else shape.global_batch
+    S = seq if seq is not None else shape.seq_len
+    if cfg.encoder_decoder:
+        S_dec = max(S // cfg.dec_len_ratio, 1)
+        return {
+            "frames": SDS((B, S, cfg.d_model), jnp.float32),
+            "tokens": SDS((B, S_dec), jnp.int32),
+            "labels": SDS((B, S_dec), jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        P = cfg.n_prefix_tokens
+        return {
+            "patches": SDS((B, P, cfg.d_model), jnp.float32),
+            "tokens": SDS((B, S - P), jnp.int32),
+            "labels": SDS((B, S), jnp.int32),   # -1 over the prefix
+        }
+    return {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+    }
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
+                 batch: int | None = None, seq: int | None = None) -> dict:
+    """Inputs for one ``serve_step`` decode call: token + cache + position."""
+    from repro.models.transformer import init_cache
+    B = batch if batch is not None else shape.global_batch
+    S = seq if seq is not None else shape.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return {
+        "tokens": SDS((B, 1), jnp.int32),
+        "cache": cache,
+        "pos": SDS((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, **kw) -> dict:
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape, **kw)
+    return batch_specs(cfg, shape, **kw)
+
+
+def make_batch(cfg: ModelConfig, key, batch: int, seq: int) -> dict:
+    """Concrete random batch matching ``batch_specs`` (for smoke/examples)."""
+    ks = jax.random.split(key, 3)
+    if cfg.encoder_decoder:
+        S_dec = max(seq // cfg.dec_len_ratio, 1)
+        tok = jax.random.randint(ks[0], (batch, S_dec), 0, cfg.vocab_size)
+        return {
+            "frames": jax.random.normal(ks[1], (batch, seq, cfg.d_model),
+                                        jnp.float32),
+            "tokens": tok,
+            "labels": jnp.roll(tok, -1, axis=1),
+        }
+    if cfg.frontend == "vision":
+        P = cfg.n_prefix_tokens
+        tok = jax.random.randint(ks[0], (batch, seq - P), 0, cfg.vocab_size)
+        labels = jnp.concatenate(
+            [jnp.full((batch, P), -1, jnp.int32),
+             jnp.roll(tok, -1, axis=1)], axis=1)
+        return {
+            "patches": jax.random.normal(ks[1], (batch, P, cfg.d_model),
+                                         jnp.float32),
+            "tokens": tok,
+            "labels": labels,
+        }
+    tok = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size)
+    return {"tokens": tok, "labels": jnp.roll(tok, -1, axis=1)}

@@ -1,0 +1,20 @@
+"""Losses and metrics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels, ignore_index: int = -1):
+    """logits: (B,S,V); labels: (B,S) int32 with ignore_index masked out.
+
+    Computed in f32; returns (mean loss, token count).
+    """
+    lf = logits.astype(jnp.float32)
+    mask = labels != ignore_index
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    per_tok = (lse - ll) * mask
+    n = jnp.maximum(mask.sum(), 1)
+    return per_tok.sum() / n, n

@@ -1,0 +1,95 @@
+"""Griffin recurrent block: temporal conv1d + RG-LRU (real-gated LRU).
+
+Sequence processing uses ``lax.associative_scan`` (log-depth, fully counted by
+HLO cost analysis — no scan-correction needed); decode is a single-step
+recurrence with O(1) state:  ``h_t = a_t*h_{t-1} + sqrt(1-a_t^2)*(i_t*x_t)``
+with ``a_t = exp(-c*softplus(L)*sigmoid(Wa x))``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import constrain
+from repro.models.modules import pdtype
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d, dr, cw = cfg.d_model, cfg.d_rnn or cfg.d_model, cfg.conv_width
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_y": jax.random.normal(ks[0], (d, dr), dt) * d ** -0.5,
+        "w_x": jax.random.normal(ks[1], (d, dr), dt) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[2], (cw, dr), jnp.float32) * cw ** -0.5,
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "wa": jax.random.normal(ks[3], (dr, dr), dt) * dr ** -0.5,
+        "ba": jnp.zeros((dr,), jnp.float32),
+        "wi": jax.random.normal(ks[4], (dr, dr), dt) * dr ** -0.5,
+        "bi": jnp.zeros((dr,), jnp.float32),
+        # Lambda init so that a^c=sigmoid(lam)^8 spreads over (0.9, 0.999)
+        "lam": jnp.linspace(2.2, 6.9, dr, dtype=jnp.float32),
+        "w_out": jax.random.normal(ks[5], (dr, d), dt) * dr ** -0.5,
+    }
+
+
+def _gates(p, xi):
+    r = jax.nn.sigmoid((xi @ p["wa"]).astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid((xi @ p["wi"]).astype(jnp.float32) + p["bi"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # < 0
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * i * xi.astype(jnp.float32)
+
+
+def rglru_seq(params, x, cfg: ModelConfig, h0=None):
+    """x: (B,S,D) -> (y (B,S,D), h_last (B,dr), conv_tail (B,cw-1,dr))."""
+    B, S, D = x.shape
+    cw = cfg.conv_width
+    y_br = jax.nn.gelu((x @ params["w_y"]).astype(jnp.float32))
+    xi = x @ params["w_x"]                                # (B,S,dr)
+    xi = constrain(xi, ("batch", "seq", "rnn"))
+    # causal depthwise conv
+    pad = jnp.zeros((B, cw - 1, xi.shape[-1]), xi.dtype)
+    xp = jnp.concatenate([pad, xi], axis=1)
+    conv = sum(xp[:, i:i + S] * params["conv_w"][i] for i in range(cw))
+    conv = (conv.astype(jnp.float32) + params["conv_b"]).astype(x.dtype)
+
+    a, b = _gates(params, conv)                           # (B,S,dr) f32
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    y = (h * y_br).astype(x.dtype) @ params["w_out"]
+    h_last = h[:, -1].astype(jnp.float32)
+    conv_tail = xp[:, -(cw - 1):]
+    return y, h_last, conv_tail
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    dr, cw = cfg.d_rnn or cfg.d_model, cfg.conv_width
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, dr), dtype)}
+
+
+def rglru_decode(params, x, cfg: ModelConfig, cache):
+    """x: (B,1,D) single step; cache: {'h','conv'}."""
+    B = x.shape[0]
+    y_br = jax.nn.gelu((x[:, 0] @ params["w_y"]).astype(jnp.float32))
+    xi = x[:, 0] @ params["w_x"]                          # (B,dr)
+    win = jnp.concatenate([cache["conv"], xi[:, None]], axis=1)  # (B,cw,dr)
+    conv = jnp.einsum("bcd,cd->bd", win.astype(jnp.float32),
+                      params["conv_w"]) + params["conv_b"]
+    conv = conv.astype(x.dtype)
+    a, b = _gates(params, conv)
+    h = a * cache["h"] + b
+    y = ((h * y_br).astype(x.dtype) @ params["w_out"])[:, None]
+    return y, {"h": h, "conv": win[:, 1:].astype(cache["conv"].dtype)}

@@ -1,0 +1,272 @@
+"""RWKV-6 (Finch): time-mix with data-dependent decay + channel-mix.
+
+Two sequence paths with identical semantics:
+
+* ``wkv_scan``    — exact sequential recurrence (oracle; decode uses the same
+  single-step update).
+* ``wkv_chunked`` — chunk-parallel form: the recurrence inside a chunk of
+  ``c`` tokens is expressed as matmuls (MXU-friendly — this is the TPU
+  adaptation of the CUDA wkv kernel), scanning only over chunks.
+
+Numerical safety of the chunked form: the intra-chunk pairwise decay
+``exp(lp_{t-1} - lp_s)`` is factored per sub-tile (tile size u) as
+``exp(lp_{t-1}-lp[Ts]) * exp(lp[Ts]-lp[Se]) * exp(lp[Se]-lp_s)`` where the
+middle (tile-pair) term is masked in *log space* for future tiles, so no
+factor ever exceeds ``exp(u*|logw|_max)`` and no inf*0 NaNs can occur.
+``log w`` is clamped to [-5, -1e-4]: a decay below e^-5/step reaches 1e-11
+within five steps, so the clamp is numerically immaterial.
+
+Recurrence (per head, k/v/r in R^hd):
+    y_t = r_t^T (S_{t-1} + diag(u*k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.modules import group_norm_heads, pdtype
+
+_LORA_MIX = 32
+_LORA_DECAY = 64
+_LOGW_MIN, _LOGW_MAX = -5.0, -1e-4
+_CHUNK = 256
+_TILE = 8
+
+
+def init_time_mix(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        "mu_x": jnp.zeros((d,), jnp.float32),
+        "mu": jnp.zeros((5, d), jnp.float32),              # r,k,v,w,g
+        "tm_w1": jax.random.normal(ks[0], (d, 5 * _LORA_MIX), jnp.float32) * 1e-2,
+        "tm_w2": jax.random.normal(ks[1], (5, _LORA_MIX, d), jnp.float32) * 1e-2,
+        "w0": jnp.linspace(-1.0, 1.5, d, dtype=jnp.float32),
+        "dw1": jax.random.normal(ks[2], (d, _LORA_DECAY), jnp.float32) * 1e-2,
+        "dw2": jax.random.normal(ks[3], (_LORA_DECAY, d), jnp.float32) * 1e-2,
+        "u": jax.random.normal(ks[4], (h, hd), jnp.float32) * 1e-2,
+        "wr": jax.random.normal(ks[5], (d, d), dt) * d ** -0.5,
+        "wk": jax.random.normal(ks[6], (d, d), dt) * d ** -0.5,
+        "wv": jax.random.normal(ks[7], (d, d), dt) * d ** -0.5,
+        "wg": jax.random.normal(ks[8], (d, d), dt) * d ** -0.5,
+        "wo": jax.random.normal(ks[9], (d, d), dt) * d ** -0.5,
+        "lnx_s": jnp.ones((d,), jnp.float32),
+        "lnx_b": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), jnp.float32),
+        "mu_r": jnp.zeros((d,), jnp.float32),
+        "wk": jax.random.normal(ks[0], (d, f), dt) * d ** -0.5,
+        "wv": jax.random.normal(ks[1], (f, d), dt) * f ** -0.5,
+        "wr": jax.random.normal(ks[2], (d, d), dt) * d ** -0.5,
+    }
+
+
+def _ddlerp(p, x, xs):
+    """Data-dependent token-shift interpolation -> xr,xk,xv,xw,xg."""
+    diff = (xs - x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    xxx = xf + diff * p["mu_x"]
+    a = jnp.tanh(xxx @ p["tm_w1"])
+    a = a.reshape(*a.shape[:-1], 5, _LORA_MIX)
+    m = jnp.einsum("...fl,fld->...fd", a, p["tm_w2"])
+    mixed = xf[..., None, :] + diff[..., None, :] * (p["mu"] + m)
+    return [mixed[..., i, :].astype(x.dtype) for i in range(5)]
+
+
+def _projections(p, x, xs, n_heads, hd):
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xs)
+    lead = x.shape[:-1]
+    r = (xr @ p["wr"]).reshape(*lead, n_heads, hd)
+    k = (xk @ p["wk"]).reshape(*lead, n_heads, hd)
+    v = (xv @ p["wv"]).reshape(*lead, n_heads, hd)
+    g = jax.nn.silu((xg @ p["wg"]).astype(jnp.float32))
+    logw = -jnp.exp(xw.astype(jnp.float32) @ p["dw1"] @ p["dw2"] + p["w0"])
+    logw = jnp.clip(logw, _LOGW_MIN, _LOGW_MAX)
+    logw = logw.reshape(*lead, n_heads, hd)
+    return r, k, v, g, logw
+
+
+def _finish(p, y, g, x_dtype, n_heads):
+    lead = y.shape[:-2]
+    d = y.shape[-2] * y.shape[-1]
+    y = y.reshape(*lead, d)
+    y = group_norm_heads(y.astype(jnp.float32), p["lnx_s"], p["lnx_b"],
+                         n_heads)
+    y = (y * g).astype(x_dtype)
+    return y @ p["wo"]
+
+
+def _shifted(x, x_prev):
+    first = x_prev[:, None] if x_prev is not None else jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# exact sequential path (oracle)
+# ---------------------------------------------------------------------------
+def wkv_scan(p, x, cfg: ModelConfig, state0=None, x_prev=None):
+    """x: (B,S,D). Returns (out, S_last (B,H,hd,hd) f32, x_last (B,D))."""
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    r, k, v, g, logw = _projections(p, x, _shifted(x, x_prev), H, hd)
+    u = p["u"]
+    st0 = state0 if state0 is not None \
+        else jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(st, inp):
+        rt, kt, vt, wt = [t.astype(jnp.float32) for t in inp[:3]] + [inp[3]]
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,hd,hd)
+        yt = jnp.einsum("bhi,bhij->bhj", rt, st + u[:, :, None] * kv)
+        st = jnp.exp(wt)[..., :, None] * st + kv
+        return st, yt
+
+    xs_t = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, logw))
+    st, ys = jax.lax.scan(step, st0, xs_t)
+    y = ys.transpose(1, 0, 2, 3)                           # (B,S,H,hd)
+    return _finish(p, y, g, x.dtype, H), st, x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# chunk-parallel path (MXU form)
+# ---------------------------------------------------------------------------
+def _intra_chunk(rc, kc, vc, lp, lp_prev, u, c: int, tile: int):
+    """y_intra[t] = sum_{s<t} (r_t * exp(lp_{t-1}-lp_s) * k_s) . v_s
+                  + (r_t . (u*k_t)) v_t      — all within one chunk.
+
+    rc,kc,vc: (..., c, hd); lp,lp_prev: cumulative log-decays (..., c, hd).
+    Tile-factored for f32 safety (see module docstring).
+    """
+    *lead, _, hd = rc.shape
+    nt = c // tile
+    shp = (*lead, nt, tile, hd)
+    lp_t = lp.reshape(shp)
+    lpp_t = lp_prev.reshape(shp)
+    ts = lp_t[..., 0, :]                                   # lp at tile start
+    te = lp_t[..., -1, :]                                  # lp at tile end
+    r_f = rc.reshape(shp) * jnp.exp(lpp_t - ts[..., None, :])
+    k_f = kc.reshape(shp) * jnp.exp(te[..., None, :] - lp_t)
+    # tile-pair decay, masked in log space for future tiles
+    mid = ts[..., :, None, :] - te[..., None, :, :]        # (...,T,S,hd)
+    tmask = (jnp.arange(nt)[:, None] > jnp.arange(nt)[None, :])
+    mid = jnp.where(tmask[..., None], mid, -jnp.inf)
+    # off-diagonal (strictly earlier tiles): 3-factor product
+    A_off = jnp.einsum("...Tti,...TSi,...Ssi->...TtSs",
+                       r_f, jnp.exp(mid), k_f)
+    # diagonal tiles: direct pairwise (exponent bounded by tile span)
+    expo = lpp_t[..., :, None, :] - lp_t[..., None, :, :]  # (...,T,t,s,hd)
+    dmask = (jnp.arange(tile)[:, None] > jnp.arange(tile)[None, :])
+    expo = jnp.where(dmask[..., None], expo, -jnp.inf)
+    A_diag = jnp.einsum("...Tti,...Ttsi->...Tts",
+                        rc.reshape(shp), jnp.exp(expo) * kc.reshape(shp)[..., None, :, :])
+    eyeT = jnp.eye(nt, dtype=A_off.dtype)
+    A = A_off + jnp.einsum("...Tts,TS->...TtSs", A_diag, eyeT)
+    A = A.reshape(*lead, c, c)
+    y = jnp.einsum("...ts,...sj->...tj", A, vc)
+    diag_bonus = jnp.einsum("...ti,...ti->...t", rc, u[:, None, :] * kc)
+    return y + diag_bonus[..., None] * vc
+
+
+def wkv_chunked(p, x, cfg: ModelConfig, state0=None, x_prev=None,
+                chunk: int = 0):
+    """Fully parallel over chunks: intra-chunk terms are batched matmuls and
+    inter-chunk states propagate via an associative scan (log-depth in HLO —
+    no sequential while loop, exact cost_analysis accounting)."""
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    c = chunk or min(_CHUNK, cfg.rnn_chunk, S)
+    tile = min(_TILE, c)
+    assert S % c == 0 and c % tile == 0, (S, c, tile)
+    nb = S // c
+    r, k, v, g, logw = _projections(p, x, _shifted(x, x_prev), H, hd)
+    u = p["u"]
+
+    def chunked(t):
+        return t.reshape(B, nb, c, H, hd).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, wc = map(chunked, (r.astype(jnp.float32),
+                                   k.astype(jnp.float32),
+                                   v.astype(jnp.float32), logw))
+    lp = jnp.cumsum(wc, axis=-2)                           # (nb,B,H,c,hd)
+    lp_prev = lp - wc
+    k_out = kc * jnp.exp(lp[..., -1:, :] - lp)             # decay to chunk end
+    tot = jnp.exp(lp[..., -1, :])                          # (nb,B,H,hd)
+
+    st0 = state0 if state0 is not None \
+        else jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    # intra-chunk contribution (vectorized over the chunk axis)
+    y = _intra_chunk(rc, kc, vc, lp, lp_prev, u, c, tile)
+
+    # inter-chunk states: Z_j = diag(tot_j) Z_{j-1} + G_j via assoc. scan
+    G = jnp.einsum("nbhsi,nbhsj->nbhij", k_out, vc)        # (nb,B,H,hd,hd)
+
+    def comb(l, rr):
+        al, bl = l
+        ar, br = rr
+        return al * ar, ar[..., :, None] * bl + br
+
+    a_cum, b_cum = jax.lax.associative_scan(comb, (tot, G), axis=0)
+    # state entering chunk j (j=0 -> st0)
+    ones = jnp.ones_like(tot[:1])
+    a_in = jnp.concatenate([ones, a_cum[:-1]], axis=0)
+    b_in = jnp.concatenate([jnp.zeros_like(G[:1]), b_cum[:-1]], axis=0)
+    s_in = a_in[..., :, None] * st0[None] + b_in           # (nb,B,H,hd,hd)
+    y = y + jnp.einsum("nbhti,nbhij->nbhtj", rc * jnp.exp(lp_prev), s_in)
+    st = a_cum[-1][..., :, None] * st0 + b_cum[-1]
+
+    y = y.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+    return _finish(p, y, g, x.dtype, H), st, x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# decode + channel mix
+# ---------------------------------------------------------------------------
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    return {
+        "state": jnp.zeros((batch, d // hd, hd, hd), jnp.float32),
+        "tm_x": jnp.zeros((batch, d), dtype),
+        "cm_x": jnp.zeros((batch, d), dtype),
+    }
+
+
+def time_mix_decode(p, x, cfg: ModelConfig, cache):
+    """x: (B,1,D) -> (out (B,1,D), new (state, tm_x))."""
+    B, _, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    xt = x[:, 0]
+    r, k, v, g, logw = _projections(p, xt, cache["tm_x"], H, hd)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = kf[..., :, None] * vf[..., None, :]
+    st = cache["state"]
+    y = jnp.einsum("bhi,bhij->bhj", rf, st + p["u"][:, :, None] * kv)
+    st = jnp.exp(logw)[..., :, None] * st + kv
+    out = _finish(p, y[:, None], g[:, None], x.dtype, H)
+    return out, st, xt
+
+
+def channel_mix(p, x, x_prev=None):
+    """x: (B,S,D) (or (B,1,D) decode with x_prev=(B,D) cache)."""
+    xs = _shifted(x, x_prev)
+    diff = xs - x
+    xk = x + diff * p["mu_k"].astype(x.dtype)
+    xr = x + diff * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid((xr @ p["wr"]).astype(jnp.float32)).astype(x.dtype) \
+        * (k @ p["wv"]), x[:, -1]

@@ -1,0 +1,400 @@
+"""Model assembly: embeddings, layer stacks (scan over superblocks), heads.
+
+One code path serves all ten assigned architectures; the per-layer "kind"
+(global/local attention, RG-LRU, RWKV) comes from ``cfg.layer_pattern``.
+Layers are stacked as ``n_superblocks`` repetitions of the pattern scanned
+with ``lax.scan`` (compact HLO at 94 layers) plus an unrolled tail for
+non-divisible depths.
+
+Entry points:
+    init_params(key, cfg)                        -> params pytree
+    forward_train(params, cfg, batch)            -> (logits, aux_loss)
+    forward_prefill(params, cfg, batch)          -> (logits, cache)
+    forward_decode(params, cfg, cache, tok, pos) -> (logits, cache)
+    init_cache(cfg, batch, seq_len)              -> cache pytree
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, RGLRU, RWKV, ModelConfig
+from repro.distributed.context import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.modules import (init_mlp, init_norm, mlp, pdtype, rms_norm,
+                                  sinusoidal_pos_emb)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig, kind: str, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {"ln1": init_norm(ks[0], cfg.d_model),
+         "ln2": init_norm(ks[1], cfg.d_model)}
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        p["attn"] = attn.init_attention(ks[2], cfg)
+        if cfg.moe is not None:
+            p["moe"] = moe_mod.init_moe(ks[3], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[3], cfg)
+        if cfg.post_norms:
+            p["post_ln1"] = init_norm(ks[4], cfg.d_model)
+            p["post_ln2"] = init_norm(ks[5], cfg.d_model)
+    elif kind == RGLRU:
+        p["rec"] = rglru_mod.init_rglru(ks[2], cfg)
+        p["mlp"] = init_mlp(ks[3], cfg)
+    elif kind == RWKV:
+        p["tm"] = rwkv_mod.init_time_mix(ks[2], cfg)
+        p["cm"] = rwkv_mod.init_channel_mix(ks[3], cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["ln_x"] = init_norm(ks[4], cfg.d_model)
+        p["xattn"] = attn.init_attention(ks[5], cfg, cross=True)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    cross = cfg.encoder_decoder
+    params = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), dt)
+        * 0.02,
+        "final_norm": init_norm(ks[1], cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            ks[2], (cfg.vocab_size, cfg.d_model), dt) * 0.02
+
+    # scanned superblocks: tuple over pattern positions, leaves (R, ...)
+    R = cfg.n_superblocks
+    bk = jax.random.split(ks[3], max(R, 1) * cfg.pattern_len)
+    blocks = []
+    for j, kind in enumerate(cfg.layer_pattern):
+        reps = [_init_layer(bk[i * cfg.pattern_len + j], cfg, kind, cross)
+                for i in range(R)]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *reps))
+    params["blocks"] = tuple(blocks)
+    tk = jax.random.split(ks[4], max(cfg.n_tail, 1))
+    params["tail"] = tuple(
+        _init_layer(tk[i], cfg, kind, cross)
+        for i, kind in enumerate(cfg.tail_pattern))
+
+    if cfg.encoder_decoder:
+        ek = jax.random.split(ks[5], cfg.n_enc_layers + 1)
+        params["enc_blocks"] = tuple(
+            _init_layer(ek[i], cfg, ATTN_GLOBAL) for i in range(cfg.n_enc_layers))
+        params["enc_norm"] = init_norm(ek[-1], cfg.d_model)
+    if cfg.frontend:
+        params["frontend_proj"] = jax.random.normal(
+            ks[6], (cfg.d_model, cfg.d_model), dt) * cfg.d_model ** -0.5
+    return params
+
+
+# ---------------------------------------------------------------------------
+# single-layer application (sequence mode)
+# ---------------------------------------------------------------------------
+def _layer_seq(p, x, cfg: ModelConfig, kind: str, positions, mask_mode,
+               prefix_len, enc_out=None, want_cache=False, seq_exact=False):
+    """Returns (x, aux, cache_entry)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = {}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        o, (k, v) = attn.attention_seq(p["attn"], h, cfg, kind, positions,
+                                       mask_mode, prefix_len)
+        if cfg.post_norms:
+            o = rms_norm(o, p["post_ln1"], cfg.norm_eps)
+        x = x + o
+        if "ln_x" in p:  # whisper decoder cross-attention
+            hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+            enc, enc_pos = enc_out
+            ox, (ck, cv) = attn.attention_seq(
+                p["xattn"], hx, cfg, ATTN_GLOBAL, positions, "bidir",
+                kv_override=(enc, enc_pos))
+            x = x + ox
+            if want_cache:
+                cache["ck"], cache["cv"] = ck, cv
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            f, aux = moe_mod.moe_layer(p["moe"], h2, cfg)
+        else:
+            f = mlp(p["mlp"], h2, cfg.act)
+        if cfg.post_norms:
+            f = rms_norm(f, p["post_ln2"], cfg.norm_eps)
+        x = x + f
+        if want_cache:
+            if kind == ATTN_LOCAL and cfg.window_size:
+                ring = attn.build_ring_cache(k, v, cfg.window_size,
+                                             cfg.kv_quant)
+                cache.update(ring)
+            else:
+                cache.update(attn.pack_kv(k, v, cfg.kv_quant))
+    elif kind == RGLRU:
+        o, h_last, conv_tail = rglru_mod.rglru_seq(p["rec"], h, cfg)
+        x = x + o
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp(p["mlp"], h2, cfg.act)
+        if want_cache:
+            cache = {"h": h_last, "conv": conv_tail}
+    elif kind == RWKV:
+        fn = rwkv_mod.wkv_scan if seq_exact else rwkv_mod.wkv_chunked
+        o, st, x_last_tm = fn(p["tm"], h, cfg)
+        x = x + o
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        o2, x_last_cm = rwkv_mod.channel_mix(p["cm"], h2)
+        x = x + o2
+        if want_cache:
+            cache = {"state": st, "tm_x": x_last_tm, "cm_x": x_last_cm}
+    # sequence-parallel residual boundary: the scan carry (and the per-layer
+    # activation checkpoints it implies for backward) stays sharded over the
+    # model axis, Megatron-SP style.
+    x = constrain(x, ("batch", "act_seq", None))
+    return x, aux, cache
+
+
+def _layer_decode(p, x, cfg: ModelConfig, kind: str, cache, pos, prefix_len):
+    """x: (B,1,D); returns (x, new_cache)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        self_cache = {k: v for k, v in cache.items()
+                      if k in ("k", "v", "ksc", "vsc")}
+        o, nc = attn.attention_decode(p["attn"], h, cfg, kind, self_cache,
+                                      pos, prefix_len)
+        if cfg.post_norms:
+            o = rms_norm(o, p["post_ln1"], cfg.norm_eps)
+        x = x + o
+        new_cache = dict(cache)
+        new_cache.update(nc)
+        if "ln_x" in p:
+            hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+            ox, _ = attn.attention_decode(
+                p["xattn"], hx, cfg, ATTN_GLOBAL,
+                {"ck": cache["ck"], "cv": cache["cv"]}, pos, cross=True)
+            x = x + ox
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            f, _ = moe_mod.moe_layer(p["moe"], h2, cfg, decode=True)
+        else:
+            f = mlp(p["mlp"], h2, cfg.act)
+        if cfg.post_norms:
+            f = rms_norm(f, p["post_ln2"], cfg.norm_eps)
+        x = x + f
+    elif kind == RGLRU:
+        o, nc = rglru_mod.rglru_decode(p["rec"], h, cfg, cache)
+        x = x + o
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp(p["mlp"], h2, cfg.act)
+        new_cache = nc
+    elif kind == RWKV:
+        o, st, tm_x = rwkv_mod.time_mix_decode(p["tm"], h, cfg, cache)
+        x = x + o
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        o2, cm_x = rwkv_mod.channel_mix(p["cm"], h2, cache["cm_x"])
+        x = x + o2
+        new_cache = {"state": st, "tm_x": tm_x, "cm_x": cm_x}
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def _run_stack(params, x, cfg: ModelConfig, positions, mask_mode, prefix_len,
+               enc_out=None, want_cache=False, remat=False, seq_exact=False):
+    """Scan superblocks then unrolled tail. Returns (x, aux, cache)."""
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def block_fn(carry, bp):
+        x, aux = carry
+        caches = []
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, a, c = _layer_seq(bp[j], x, cfg, kind, positions, mask_mode,
+                                 prefix_len, enc_out, want_cache, seq_exact)
+            aux = aux + a
+            caches.append(c)
+        return (x, aux), tuple(caches)
+
+    fn = _remat_wrap(block_fn, cfg) if remat else block_fn
+    if cfg.n_superblocks > 0:
+        (x, aux), block_caches = jax.lax.scan(fn, (x, aux0), params["blocks"])
+    else:
+        block_caches = ()
+        aux = aux0
+
+    tail_caches = []
+    for j, kind in enumerate(cfg.tail_pattern):
+        x, a, c = _layer_seq(params["tail"][j], x, cfg, kind, positions,
+                             mask_mode, prefix_len, enc_out, want_cache,
+                             seq_exact)
+        aux = aux + a
+        tail_caches.append(c)
+    cache = {"blocks": block_caches, "tail": tuple(tail_caches)} \
+        if want_cache else None
+    return x, aux, cache
+
+
+def _embed(params, cfg: ModelConfig, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, w)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = (c * jnp.tanh(logits.astype(jnp.float32) / c)).astype(
+            logits.dtype)
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def _encode(params, cfg: ModelConfig, frames):
+    """Whisper encoder over precomputed frame embeddings (B,S,D)."""
+    B, S, D = frames.shape
+    x = frames.astype(pdtype(cfg)) @ params["frontend_proj"]
+    x = x + sinusoidal_pos_emb(S, D, x.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    for p in params["enc_blocks"]:
+        x, _, _ = _layer_seq(
+            {k: v for k, v in p.items() if k not in ("ln_x", "xattn")},
+            x, cfg, ATTN_GLOBAL, pos, "bidir", 0)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps), pos
+
+
+def _prep_inputs(params, cfg: ModelConfig, batch):
+    """Embedding + frontend stub handling -> (x, positions, mask_mode,
+    prefix_len, enc_out)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    enc_out = None
+    mask_mode, prefix_len = "causal", 0
+    if cfg.encoder_decoder:
+        enc_out = _encode(params, cfg, batch["frames"])
+        x = _embed(params, cfg, tokens)
+        S = tokens.shape[1]
+        x = x + sinusoidal_pos_emb(S, cfg.d_model, x.dtype)[None]
+    elif cfg.frontend == "vision":
+        patches = batch["patches"].astype(pdtype(cfg)) @ params["frontend_proj"]
+        x_txt = _embed(params, cfg, tokens)
+        x = jnp.concatenate([patches, x_txt], axis=1)
+        mask_mode, prefix_len = "prefix", cfg.n_prefix_tokens
+    else:
+        x = _embed(params, cfg, tokens)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = constrain(x, ("batch", "act_seq", None))
+    return x, positions, mask_mode, prefix_len, enc_out
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+def forward_train(params, cfg: ModelConfig, batch, seq_exact: bool = False):
+    x, positions, mask_mode, prefix_len, enc_out = _prep_inputs(
+        params, cfg, batch)
+    x, aux, _ = _run_stack(params, x, cfg, positions, mask_mode, prefix_len,
+                           enc_out, want_cache=False, remat=True,
+                           seq_exact=seq_exact)
+    return _unembed(params, cfg, x), aux
+
+
+def forward_prefill(params, cfg: ModelConfig, batch):
+    x, positions, mask_mode, prefix_len, enc_out = _prep_inputs(
+        params, cfg, batch)
+    x, _, cache = _run_stack(params, x, cfg, positions, mask_mode, prefix_len,
+                             enc_out, want_cache=True)
+    logits = _unembed(params, cfg, x[:, -1:])
+    return logits, cache
+
+
+def forward_decode(params, cfg: ModelConfig, cache, tokens, pos):
+    """tokens: (B,1); pos: scalar int32; cache from init_cache/prefill."""
+    x = _embed(params, cfg, tokens)
+    if cfg.encoder_decoder:
+        x = x + _sin_at(pos, cfg.d_model, x.dtype)
+    prefix_len = cfg.n_prefix_tokens
+    x = constrain(x, ("batch", "seq", None))
+
+    def block_fn(carry, xs):
+        x, = carry
+        bp, bc = xs
+        new_caches = []
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, nc = _layer_decode(bp[j], x, cfg, kind, bc[j], pos, prefix_len)
+            new_caches.append(nc)
+        return (x,), tuple(new_caches)
+
+    if cfg.n_superblocks > 0:
+        (x,), new_block_caches = jax.lax.scan(
+            block_fn, (x,), (params["blocks"], cache["blocks"]))
+    else:
+        new_block_caches = ()
+    new_tail = []
+    for j, kind in enumerate(cfg.tail_pattern):
+        x, nc = _layer_decode(params["tail"][j], x, cfg, kind,
+                              cache["tail"][j], pos, prefix_len)
+        new_tail.append(nc)
+    logits = _unembed(params, cfg, x)
+    return logits, {"blocks": new_block_caches, "tail": tuple(new_tail)}
+
+
+def _sin_at(pos, d, dtype):
+    i = jnp.arange(d // 2)
+    ang = pos.astype(jnp.float32) / jnp.power(10_000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# cache init (zeros; decode-from-scratch or dry-run stand-in)
+# ---------------------------------------------------------------------------
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                 dtype, cross_len: int = 0):
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        c = attn.init_attn_cache(cfg, kind, batch, seq_len, dtype)
+        if cfg.encoder_decoder:
+            c.update(attn.init_attn_cache(cfg, kind, batch, seq_len, dtype,
+                                          cross_len=cross_len))
+        return c
+    if kind == RGLRU:
+        return rglru_mod.init_rglru_cache(cfg, batch, dtype)
+    if kind == RWKV:
+        return rwkv_mod.init_rwkv_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    cross_len = seq_len if cfg.encoder_decoder else 0
+    dec_len = seq_len // cfg.dec_len_ratio if cfg.encoder_decoder else seq_len
+    R = cfg.n_superblocks
+    blocks = []
+    for j, kind in enumerate(cfg.layer_pattern):
+        one = _layer_cache(cfg, kind, batch, dec_len, dtype, cross_len)
+        blocks.append(jax.tree.map(
+            lambda t: jnp.zeros((R,) + t.shape, t.dtype), one)
+            if R else one)
+    tail = tuple(_layer_cache(cfg, kind, batch, dec_len, dtype, cross_len)
+                 for kind in cfg.tail_pattern)
+    return {"blocks": tuple(blocks), "tail": tail}

@@ -1,0 +1,179 @@
+"""Minimal functional optimizers (no external deps).
+
+* ``adamw``     — fp32 m/v (+ optional fp32 master weights), decoupled decay.
+* ``adafactor`` — factored second moment (fp32 row/col vectors); the only
+  optimizer whose state fits a single v5e pod for the 235B/480B MoEs.
+
+State trees mirror the param tree so the ZeRO sharding rules in
+``distributed/layouts.py`` apply uniformly.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (new_params, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+class _Pack:
+    """Multi-value leaf wrapper (params trees contain real tuples, so we
+    cannot use tuples as is_leaf sentinels)."""
+
+    def __init__(self, *items):
+        self.items = items
+
+
+def _unpack(tree, i):
+    return jax.tree.map(lambda t: t.items[i], tree,
+                        is_leaf=lambda x: isinstance(x, _Pack))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    # scale in the grad's own dtype: an f32 copy of every grad at once would
+    # add 2 bytes/param of live memory for nothing
+    return jax.tree.map(
+        lambda g: (g * scale.astype(g.dtype)), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, max_grad_norm: float = 1.0,
+          master: bool = True, update_constraint=None) -> Optimizer:
+    """``update_constraint``: optional sharding tree (params-shaped) pinning
+    the f32 update math to optimizer-state (ZeRO) sharding, so the new-param
+    all-gather happens *after* the bf16 convert."""
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        st = {
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if master:
+            st["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return st
+
+    def update(grads, st, params, lr):
+        grads, gn = clip_by_global_norm(grads, max_grad_norm)
+        c = st["count"] + 1
+        bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p, pm):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            base = pm if master else p.astype(jnp.float32)
+            step = mh / (jnp.sqrt(vh) + eps) + weight_decay * base
+            new = base - lr * step
+            return _Pack(m, v, new)
+
+        pm_tree = st["master"] if master else params
+        flat = jax.tree.map(upd, grads, st["m"], st["v"], params, pm_tree)
+        m = _unpack(flat, 0)
+        v = _unpack(flat, 1)
+        new_f32 = _unpack(flat, 2)
+        if update_constraint is not None:
+            new_f32 = jax.lax.with_sharding_constraint(
+                new_f32, update_constraint)
+        new_params = jax.tree.map(lambda n, p: n.astype(p.dtype),
+                                  new_f32, params)
+        new_st = {"m": m, "v": v, "count": c}
+        if master:
+            new_st["master"] = new_f32
+        return new_params, new_st, gn
+
+    return Optimizer("adamw", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum, no master copy)
+# ---------------------------------------------------------------------------
+def adafactor(eps: float = 1e-30, clip_thresh: float = 1.0,
+              decay_pow: float = 0.8, weight_decay: float = 0.0,
+              max_grad_norm: float = 1.0, update_constraint=None) -> Optimizer:
+    def factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"vs": jax.tree.map(st, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, st, params, lr):
+        grads, gn = clip_by_global_norm(grads, max_grad_norm)
+        c = st["count"] + 1
+        beta = 1.0 - c.astype(jnp.float32) ** -decay_pow
+
+        def upd(g, s, p):
+            g2 = jnp.square(g) + eps
+            if factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = vr.mean(-1, keepdims=True)
+                u = g * jax.lax.rsqrt(vr / jnp.maximum(denom, eps))[..., None] \
+                    * jax.lax.rsqrt(vc)[..., None, :]
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v)
+                ns = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_thresh)
+            pf = p.astype(jnp.float32)
+            new = pf - lr * (u + weight_decay * pf)
+            return _Pack(ns, new.astype(p.dtype))
+
+        out = jax.tree.map(upd, grads, st["vs"], params)
+        vs = _unpack(out, 0)
+        new_params = _unpack(out, 1)
+        if update_constraint is not None:
+            new_params = jax.lax.with_sharding_constraint(
+                new_params, update_constraint)
+        return new_params, {"vs": vs, "count": c}, gn
+
+    return Optimizer("adafactor", init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)

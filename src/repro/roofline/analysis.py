@@ -1,0 +1,212 @@
+"""Three-term roofline from the dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+Sources: ``compiled.cost_analysis()`` (per-device, partitioned module) and
+HLO-text collective operand bytes, both recorded per cell by
+``launch/dryrun.py``.  Scan correction: the superblock while-body is counted
+once by XLA, so per-cell totals are reconstructed as
+
+    total = cell + (R - 1) * (cal2 - cal1)
+
+where cal1/cal2 are the compiled 1-superblock / 1-superblock+1-unrolled-tail
+calibration variants (same shape, same shardings; the difference isolates
+one full superblock including backward, remat recompute and collectives).
+
+CPU-backend caveat (documented in EXPERIMENTS.md): XLA CPU legalizes bf16
+dots to f32, so HLO byte counts overstate a TPU's bf16 traffic by up to 2x;
+``bytes_adj`` applies a 0.55 correction factor for bf16-dominated cells.
+"""
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+
+from repro.configs.base import LM_SHAPES, get_config, list_archs, shapes_for
+
+PEAK_FLOPS = 197e12          # bf16 per chip (v5e)
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+CPU_BYTES_ADJ = 0.55         # bf16->f32 legalization inflation correction
+
+DRYRUN = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _load(name: str):
+    p = DRYRUN / f"{name}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def _coll_bytes(rec) -> float:
+    return sum(v["operand_bytes"] for v in rec["collectives"].values())
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch          # decode: one token
+
+
+def analyze_cell(arch: str, shape_name: str, mesh: str = "pod") -> dict:
+    rec = _load(f"{arch}__{shape_name}__{mesh}")
+    if rec is None:
+        return {}
+    cfg = get_config(arch)
+    R = cfg.n_superblocks
+    chips = rec["n_chips"]
+
+    flops = rec["cost"]["flops_per_device"]
+    bts = rec["cost"]["bytes_accessed"]
+    coll = _coll_bytes(rec)
+
+    cal1 = _load(f"{arch}__{shape_name}__pod__cal1")
+    cal2 = _load(f"{arch}__{shape_name}__pod__cal2")
+    corrected = cal1 is not None and cal2 is not None and R > 1
+    if corrected:
+        dflops = cal2["cost"]["flops_per_device"] \
+            - cal1["cost"]["flops_per_device"]
+        dbytes = cal2["cost"]["bytes_accessed"] \
+            - cal1["cost"]["bytes_accessed"]
+        dcoll = _coll_bytes(cal2) - _coll_bytes(cal1)
+        flops += (R - 1) * max(dflops, 0.0)
+        bts += (R - 1) * max(dbytes, 0.0)
+        coll += (R - 1) * max(dcoll, 0.0)
+
+    compute_t = flops / PEAK_FLOPS
+    memory_t = bts / HBM_BW
+    memory_t_adj = bts * CPU_BYTES_ADJ / HBM_BW
+    coll_t = coll / LINK_BW                      # per-device ~= global/chips
+    terms = {"compute": compute_t, "memory": memory_t_adj,
+             "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(arch, shape_name)
+    hlo_global = flops * chips
+    ratio = mf / hlo_global if hlo_global else 0.0
+    roofline_frac = (mf / chips / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh, "chips": chips,
+        "kind": rec["kind"], "corrected": corrected,
+        "compute_s": compute_t, "memory_s_raw": memory_t,
+        "memory_s": memory_t_adj, "collective_s": coll_t,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_ratio": ratio,
+        "roofline_fraction": roofline_frac,
+        "peak_gb": rec["memory"]["peak_gb"],
+        "recommendation": _recommend(dominant, arch, shape_name, ratio),
+    }
+
+
+def _recommend(dominant: str, arch: str, shape: str, ratio: float) -> str:
+    if dominant == "collective":
+        return ("coalesce/overlap boundary collectives (Databelt fusion) or "
+                "reshard to keep state motion on-chip")
+    if dominant == "memory":
+        if "decode" in shape or "500k" in shape:
+            return "KV/state layout: larger per-chip batch or quantized KV"
+        return ("reduce activation traffic: fused kernels (flash attention) "
+                "and less remat recompute")
+    if ratio < 0.4:
+        return ("compute-bound but low useful ratio: cut remat recompute / "
+                "masked-attention waste (flash kernel block skipping)")
+    return "compute-bound near roofline: scale batch or accept"
+
+
+def analyze_all(mesh: str = "pod") -> list:
+    rows = []
+    for arch in list_archs():
+        for s in shapes_for(arch):
+            r = analyze_cell(arch, s.name, mesh)
+            if r:
+                rows.append(r)
+    return rows
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | comp s | mem s | coll s | bound | "
+           "MODEL/HLO | roofline frac | peak GB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.4f} | "
+            f"{r['dominant'][:4]} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | {r['peak_gb']:.1f} |\n")
+    return "".join(out)
+
+
+def main():
+    rows = analyze_all()
+    out = Path(__file__).resolve().parents[3] / "experiments"
+    (out / "roofline.json").write_text(json.dumps(rows, indent=1))
+    print(to_markdown(rows))
+    worst = sorted((r for r in rows if r["roofline_fraction"] > 0),
+                   key=lambda r: r["roofline_fraction"])[:5]
+    print("\nworst roofline fractions:")
+    for r in worst:
+        print(f"  {r['arch']} {r['shape']}: {r['roofline_fraction']:.3f} "
+              f"({r['dominant']})")
+    coll = sorted(rows, key=lambda r: -r["collective_s"])[:5]
+    print("most collective-bound:")
+    for r in coll:
+        print(f"  {r['arch']} {r['shape']}: coll {r['collective_s']:.4f}s")
+
+
+if __name__ == "__main__":
+    main()
+
+
+# ---------------------------------------------------------------------------
+# multi-pod comparison: what the pod (DCN) axis costs
+# ---------------------------------------------------------------------------
+DCN_BW = 6.25e9   # bytes/s per chip-pair across pods (assumed 50 Gb/s)
+
+
+def compare_meshes() -> list:
+    """Per train/prefill cell: single-pod vs multi-pod collective picture.
+    The pod axis is pure DP, so multi-pod adds a cross-DCN gradient
+    all-reduce; everything else stays intra-pod."""
+    rows = []
+    for arch in list_archs():
+        for s in shapes_for(arch):
+            if s.kind == "decode":
+                continue
+            a = _load(f"{arch}__{s.name}__pod")
+            b = _load(f"{arch}__{s.name}__multipod")
+            if not a or not b:
+                continue
+            ca, cb = _coll_bytes(a), _coll_bytes(b)
+            rows.append({
+                "arch": arch, "shape": s.name,
+                "pod_coll_gb": ca / 1e9,
+                "multipod_coll_gb": cb / 1e9,
+                "delta_gb": (cb - ca) / 1e9,
+                "dcn_term_s": max(cb - ca, 0) / DCN_BW,
+                "pod_peak_gb": a["memory"]["peak_gb"],
+                "multipod_peak_gb": b["memory"]["peak_gb"],
+            })
+    return rows
+
+
+def multipod_markdown() -> str:
+    rows = compare_meshes()
+    out = ["| arch | shape | pod coll GB | 2-pod coll GB | Δ GB | "
+           "DCN term s |\n|---|---|---|---|---|---|\n"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['pod_coll_gb']:.2f} | "
+            f"{r['multipod_coll_gb']:.2f} | {r['delta_gb']:+.2f} | "
+            f"{r['dcn_term_s']:.3f} |\n")
+    return "".join(out)

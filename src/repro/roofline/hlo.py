@@ -1,0 +1,91 @@
+"""HLO-text introspection: collective-operand bytes, op census.
+
+``collective_bytes(hlo_text)`` sums the operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(and their -start async variants), resolving operand shapes through a symbol
+table built from instruction definitions.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter, defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += int(n * _DTYPE_BYTES[dt])
+    return total
+
+
+def parse_instructions(hlo_text: str):
+    """Yields (name, shape_str, opname, rest_of_line)."""
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            yield m.group(1), m.group(2), m.group(3), line
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per collective kind: count + operand bytes + output bytes."""
+    sizes = {}
+    insts = list(parse_instructions(hlo_text))
+    for name, shape, op, _ in insts:
+        sizes[name] = _shape_bytes(shape)
+
+    stats = {k: {"count": 0, "operand_bytes": 0, "output_bytes": 0}
+             for k in COLLECTIVES}
+    for name, shape, op, line in insts:
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue
+        # operand list: first (...) after the opname
+        idx = line.find(op)
+        m = _OPERANDS_RE.search(line[idx:])
+        operand_bytes = 0
+        if m:
+            for tok in m.group(1).split(","):
+                tok = tok.strip().lstrip("%")
+                operand_bytes += sizes.get(tok, 0)
+        out_bytes = _shape_bytes(shape)
+        if base == "all-gather" and op.endswith("-start"):
+            # async start output carries (in, out) tuple; count real out
+            out_bytes = max(out_bytes - operand_bytes, 0)
+        st = stats[base]
+        st["count"] += 1
+        st["operand_bytes"] += operand_bytes
+        st["output_bytes"] += out_bytes
+    return stats
+
+
+def total_collective_bytes(stats: dict) -> int:
+    return sum(v["operand_bytes"] for v in stats.values())
+
+
+def op_census(hlo_text: str, top: int = 20) -> list:
+    c = Counter(op for _, _, op, _ in parse_instructions(hlo_text))
+    return c.most_common(top)

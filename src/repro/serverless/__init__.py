@@ -1,0 +1,2 @@
+from repro.serverless.workflow import ServerlessFunction, Workflow  # noqa: F401
+from repro.serverless.engine import WorkflowEngine, InstanceMetrics  # noqa: F401

@@ -1,0 +1,24 @@
+"""Serve-step builders: prefill and single-token decode (greedy head)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward_decode, forward_prefill
+
+
+def build_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, cache = forward_prefill(params, cfg, batch)
+        next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_tok.astype(jnp.int32), cache
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, tokens, pos):
+        logits, new_cache = forward_decode(params, cfg, cache, tokens, pos)
+        next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_tok.astype(jnp.int32)[:, None], new_cache
+    return decode_step

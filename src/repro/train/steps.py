@@ -1,0 +1,85 @@
+"""Train-step builder: loss, grads, optimizer update — pjit-ready.
+
+The returned ``train_step(state, batch)`` is pure and donates ``state``;
+grad accumulation wraps the same loss over microbatches with a scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward_train
+from repro.models.losses import softmax_xent
+from repro.optim import Optimizer
+
+AUX_COEF = 0.01  # MoE load-balance coefficient
+
+
+def init_train_state(key, cfg: ModelConfig, optimizer: Optimizer):
+    from repro.models import init_params
+    params = init_params(key, cfg)
+    state = {"params": params, "opt": optimizer.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    # de-alias: JAX's constant cache can hand the SAME buffer to identical
+    # zero leaves (m and v, count and step, ...) — donating such a state
+    # fails with "attempt to donate the same buffer twice"
+    return jax.tree.map(lambda x: x.copy(), state)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits, aux = forward_train(params, cfg, batch)
+    loss, n = softmax_xent(logits, batch["labels"])
+    total = loss + AUX_COEF * aux
+    return total, {"loss": loss, "aux": aux, "tokens": n}
+
+
+def build_train_step(cfg: ModelConfig, optimizer: Optimizer, lr_fn,
+                     grad_accum: int = 1, grad_shardings=None):
+    """``grad_shardings``: optional sharding tree applied to the summed grads
+    before the optimizer update — forces the ZeRO reduce-scatter so the
+    update math runs at optimizer-state sharding, not full grad sharding."""
+    def one_grad(params, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+        return grads, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum > 1:
+            # unrolled (not scanned) so HLO cost analysis counts every
+            # microbatch and no extra roofline correction is needed
+            mbs = jax.tree.map(
+                lambda t: t.reshape(grad_accum, t.shape[0] // grad_accum,
+                                    *t.shape[1:]), batch)
+            grads = metrics = None
+            for i in range(grad_accum):
+                mb = jax.tree.map(lambda t: t[i], mbs)
+                if grads is not None:
+                    # force microbatch i+1's forward AFTER microbatch i's
+                    # backward — otherwise the scheduler may keep every
+                    # microbatch's activation checkpoints live at once
+                    mb, grads = jax.lax.optimization_barrier((mb, grads))
+                g, met = one_grad(params, mb)
+                grads = g if grads is None else jax.tree.map(jnp.add, grads, g)
+                metrics = met if metrics is None else \
+                    jax.tree.map(jnp.add, metrics, met)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree.map(lambda m: m / grad_accum, metrics)
+        else:
+            grads, metrics = one_grad(params, batch)
+
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        lr = lr_fn(state["step"])
+        new_params, new_opt, gnorm = optimizer.update(
+            grads, state["opt"], params, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step

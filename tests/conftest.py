@@ -1,0 +1,11 @@
+import os
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+# keep the default single-device CPU for smoke tests (the dry-run sets its
+# own 512-device flag in its own process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

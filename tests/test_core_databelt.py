@@ -1,0 +1,149 @@
+"""Unit tests for the paper's Algorithms 1-3, fusion, keys, constraints."""
+import math
+
+import pytest
+
+from repro.core.fusion import FusionGroup, plan_fusion_groups
+from repro.core.keys import StateKey
+from repro.core.propagation import compute, identify, offload
+from repro.core.slo import (SLO, FunctionDemand, locality_penalty,
+                            r1_resource_capacity, r2_temperature, r3_energy,
+                            r4_slo, r5_availability)
+from repro.core.topology import Node, TopologyGraph
+
+
+def line_graph(n=5, lat=0.01, bw=1e9):
+    g = TopologyGraph()
+    for i in range(n):
+        g.add_node(Node(f"n{i}", "satellite"))
+    for i in range(n - 1):
+        g.add_link(f"n{i}", f"n{i+1}", lat, bw)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# topology / dijkstra
+# ---------------------------------------------------------------------------
+def test_dijkstra_line():
+    g = line_graph(5)
+    path, lat = g.dijkstra("n0", "n4")
+    assert path == ["n0", "n1", "n2", "n3", "n4"]
+    assert abs(lat - 0.04) < 1e-12
+
+
+def test_dijkstra_prefers_shortcut():
+    g = line_graph(5)
+    g.add_link("n0", "n4", 0.015, 1e9)
+    path, lat = g.dijkstra("n0", "n4")
+    assert path == ["n0", "n4"]
+    assert abs(lat - 0.015) < 1e-12
+
+
+def test_dijkstra_unreachable():
+    g = line_graph(3)
+    g.add_node(Node("lonely", "satellite"))
+    path, lat = g.dijkstra("n0", "lonely")
+    assert path == [] and math.isinf(lat)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: Identify
+# ---------------------------------------------------------------------------
+def test_identify_prunes_unavailable():
+    g = line_graph(4)
+    avail = lambda nid, t: nid != "n2"
+    pruned = identify(g, avail, 0.0)
+    assert "n2" not in pruned.nodes
+    # the line is cut: n0 can no longer reach n3
+    path, lat = pruned.dijkstra("n0", "n3")
+    assert path == []
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: Compute
+# ---------------------------------------------------------------------------
+def test_compute_picks_destination_when_feasible():
+    g = line_graph(4, lat=0.001, bw=1e9)
+    target, path = compute(g, "n0", "n3", data_size=1e6, t_max=1.0)
+    assert target == "n3"          # reversed walk checks dst first
+
+
+def test_compute_falls_back_toward_source():
+    # destination too slow (tiny bw on last hop): picks an intermediate
+    g = line_graph(4, lat=0.001, bw=1e9)
+    g.add_link("n2", "n3", 0.001, 1e3)   # overwrite: starved link
+    target, _ = compute(g, "n0", "n3", data_size=1e6, t_max=0.5)
+    assert target in ("n1", "n2")
+
+
+def test_compute_fallback_source():
+    g = line_graph(2, lat=10.0)          # latency alone busts t_max
+    target, _ = compute(g, "n0", "n1", data_size=1.0, t_max=0.1)
+    assert target == "n0"
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3: Offload
+# ---------------------------------------------------------------------------
+def test_offload_uses_target_when_available():
+    g = line_graph(3)
+    assert offload(g, "n0", "n2", lambda n, t: True, 0.0) == "n2"
+
+
+def test_offload_falls_back_to_host():
+    g = line_graph(3)
+    assert offload(g, "n0", "n2", lambda n, t: n != "n2", 0.0) == "n0"
+
+
+# ---------------------------------------------------------------------------
+# fusion
+# ---------------------------------------------------------------------------
+def test_fusion_groups_colocated():
+    placement = {"a": "x", "b": "x", "c": "y", "d": "y", "e": "x"}
+    gs = plan_fusion_groups(["a", "b", "c", "d", "e"], placement)
+    assert [g.function_ids for g in gs] == [["a", "b"], ["c", "d"], ["e"]]
+
+
+def test_fusion_max_depth():
+    placement = {f"f{i}": "x" for i in range(6)}
+    gs = plan_fusion_groups([f"f{i}" for i in range(6)], placement,
+                            max_depth=2)
+    assert all(g.depth <= 2 for g in gs) and len(gs) == 3
+
+
+def test_fusion_storage_ops_constant():
+    g = FusionGroup("g", ["a", "b", "c", "d"], "x")
+    assert g.storage_ops_fused() == 2
+    assert g.storage_ops_unfused() == 8
+
+
+# ---------------------------------------------------------------------------
+# keys + constraints
+# ---------------------------------------------------------------------------
+def test_state_key_roundtrip():
+    k = StateKey("wf1", "sat3", "detect")
+    assert StateKey.decode(k.encoded()) == k
+    assert k.moved("sat5").storage_address == "sat5"
+    assert k.moved("sat5").function_id == "detect"
+
+
+def test_r_constraints():
+    g = line_graph(2)
+    g.nodes["n0"].mem = 1e9
+    g.nodes["n0"].cpu = 2.0
+    d = {"f": FunctionDemand("f", cpu=1.0, mem=0.5e9, power=5.0, t_exc=2.0)}
+    assert r1_resource_capacity(g, {"f": "n0"}, d)
+    d2 = {"f": FunctionDemand("f", cpu=4.0, mem=2e9)}
+    assert not r1_resource_capacity(g, {"f": "n0"}, d2)
+    g.nodes["n0"].t_orb = 84.9
+    assert not r2_temperature(g, {"f": "n0"}, d)
+    g.nodes["n0"].t_orb = 20.0
+    assert r2_temperature(g, {"f": "n0"}, d)
+    g.nodes["n0"].power_avail = 1.0
+    assert not r3_energy(g, {"f": "n0"}, d)
+    assert r4_slo(g, "n0", "n1", SLO(max_handoff_s=0.02))
+    assert not r4_slo(g, "n0", "n1", SLO(max_handoff_s=0.001))
+    assert r5_availability({"n0"}, {"f": "n0"})
+    assert not r5_availability(set(), {"f": "n0"})
+    assert locality_penalty(g, "n0", "n0") == 0.0
+    assert locality_penalty(g, "n0", "n1") > 0.0

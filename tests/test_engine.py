@@ -1,0 +1,76 @@
+"""End-to-end workflow engine: Databelt vs baselines (paper's evaluation in
+miniature), determinism, real-JAX function bodies."""
+import pytest
+
+from repro.continuum.network import ContinuumNetwork
+from repro.continuum.orbits import Constellation
+from repro.serverless.engine import WorkflowEngine
+from repro.serverless.workflow import flood_workflow
+
+
+@pytest.fixture(scope="module")
+def net():
+    return ContinuumNetwork(Constellation(n_planes=8, sats_per_plane=8))
+
+
+def run(net, strat, n=6, size=10e6, **kw):
+    eng = WorkflowEngine(net, strategy=strat, **kw)
+    return [eng.run_instance(flood_workflow(f"{strat}{i}"), size,
+                             t0=i * 90.0) for i in range(n)]
+
+
+def test_databelt_beats_baselines_on_locality(net):
+    db = run(net, "databelt")
+    rnd = run(net, "random")
+    sl = run(net, "stateless")
+    loc = lambda ms: sum(m.local_availability for m in ms) / len(ms)
+    hops = lambda ms: sum(m.mean_hops for m in ms) / len(ms)
+    assert loc(db) > loc(rnd)
+    assert loc(db) > loc(sl)
+    assert hops(db) < hops(rnd) < 5
+    assert hops(db) < hops(sl)
+
+
+def test_databelt_slo_compliance(net):
+    db = run(net, "databelt")
+    sl = run(net, "stateless")
+    v = lambda ms: sum(m.slo_violation_rate for m in ms) / len(ms)
+    assert v(db) <= 0.05
+    assert v(sl) > v(db)
+
+
+def test_latency_ordering(net):
+    db = run(net, "databelt")
+    sl = run(net, "stateless")
+    lat = lambda ms: sum(m.latency for m in ms) / len(ms)
+    assert lat(db) < lat(sl)
+
+
+def test_fusion_reduces_storage_ops(net):
+    unfused = WorkflowEngine(net, strategy="databelt", fusion_depth=1)
+    fused = WorkflowEngine(net, strategy="databelt", fusion_depth=4)
+    m1 = unfused.run_instance(flood_workflow("u"), 10e6)
+    m2 = fused.run_instance(flood_workflow("f"), 10e6)
+    assert m2.storage_ops <= m1.storage_ops
+
+
+def test_deterministic(net):
+    a = WorkflowEngine(net, strategy="databelt").run_instance(
+        flood_workflow("d1"), 10e6)
+    b = WorkflowEngine(net, strategy="databelt").run_instance(
+        flood_workflow("d1"), 10e6)
+    assert abs(a.latency - b.latency) < 1e-9
+
+
+def test_real_jax_compute(net):
+    eng = WorkflowEngine(net, strategy="databelt", real_compute=True)
+    m = eng.run_instance(flood_workflow("jx"), 2e6)
+    assert m.latency > 0 and m.compute_time > 0
+
+
+def test_parallel_contention(net):
+    eng = WorkflowEngine(net, strategy="databelt")
+    ms = eng.run_parallel(lambda wid: flood_workflow(wid), 6, 2e6)
+    # queueing makes later instances slower on average
+    assert ms[-1].latency >= ms[0].latency * 0.5
+    assert len(ms) == 6

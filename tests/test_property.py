@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fusion import plan_fusion_groups
+from repro.core.keys import StateKey
+from repro.core.propagation import compute
+from repro.core.topology import Node, TopologyGraph
+from repro.distributed.compression import dequantize_int8, quantize_int8
+from repro.models.moe import _capacity
+
+
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(3, 12))
+    g = TopologyGraph()
+    for i in range(n):
+        g.add_node(Node(f"n{i}", "satellite"))
+    # ring guarantees connectivity
+    for i in range(n):
+        lat = draw(st.floats(1e-4, 0.05))
+        g.add_link(f"n{i}", f"n{(i+1) % n}", lat, 1e9)
+    extra = draw(st.integers(0, n))
+    for _ in range(extra):
+        a = draw(st.integers(0, n - 1))
+        b = draw(st.integers(0, n - 1))
+        if a != b:
+            g.add_link(f"n{a}", f"n{b}", draw(st.floats(1e-4, 0.05)), 1e9)
+    return g
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_graph(), st.integers(0, 11), st.integers(0, 11))
+def test_dijkstra_path_valid_and_optimal_vs_triangle(g, a, b):
+    ids = sorted(g.nodes)
+    src, dst = ids[a % len(ids)], ids[b % len(ids)]
+    path, lat = g.dijkstra(src, dst)
+    assert path[0] == src and path[-1] == dst
+    # path latency == reported latency
+    assert abs(g.path_latency(path) - lat) < 1e-9
+    # triangle inequality vs any intermediate
+    for mid in ids:
+        _, l1 = g.dijkstra(src, mid)
+        _, l2 = g.dijkstra(mid, dst)
+        assert lat <= l1 + l2 + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_graph(), st.floats(1e3, 1e8), st.floats(1e-3, 1.0))
+def test_compute_target_on_path_and_feasible(g, size, t_max):
+    ids = sorted(g.nodes)
+    src, dst = ids[0], ids[-1]
+    target, path = compute(g, src, dst, size, t_max)
+    assert target in g.nodes
+    assert target == src or target in path
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(["x", "y", "z"]), min_size=1, max_size=12),
+       st.integers(0, 4))
+def test_fusion_partition_preserves_order(nodes, max_depth):
+    order = [f"f{i}" for i in range(len(nodes))]
+    placement = dict(zip(order, nodes))
+    groups = plan_fusion_groups(order, placement, max_depth=max_depth)
+    flat = [f for g in groups for f in g.function_ids]
+    assert flat == order                       # partition, order-preserving
+    for g in groups:
+        assert len({placement[f] for f in g.function_ids}) == 1  # co-located
+        if max_depth:
+            assert g.depth <= max_depth
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 8), st.integers(2, 128),
+       st.floats(1.0, 2.0))
+def test_capacity_bounds(T, k, E, cf):
+    C = _capacity(T, k, E, cf)
+    assert 1 <= C <= T
+    # capacity covers the mean load
+    assert C * E >= min(T * k, E) or C == T
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3), min_size=1, max_size=64))
+def test_quantize_error_bound(xs):
+    x = jnp.asarray(np.array(xs, np.float32))
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x).max()
+    assert float(err) <= float(s) / 2 + 1e-5
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(alphabet=st.characters(blacklist_characters=":",
+                                      min_codepoint=33, max_codepoint=126),
+               min_size=1, max_size=12).filter(lambda s: "::" not in s),
+       st.text(alphabet="abcdef0123456789", min_size=1, max_size=8),
+       st.text(alphabet="abcdef0123456789", min_size=1, max_size=8))
+def test_state_key_roundtrip_property(w, a, f):
+    k = StateKey(w, a, f)
+    assert StateKey.decode(k.encoded()) == k
