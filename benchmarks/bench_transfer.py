@@ -1,0 +1,54 @@
+"""State-transfer microbenchmark: SSSP cache vs uncached Dijkstra.
+
+40-satellite Walker shell (5 planes x 8 sats) + the paper-scenario ground
+sites; times ``TwoTierStorage._transfer``-shaped path queries on a fixed
+snapshot the way one simulation step issues them: many pairs, repeated
+sources.  Verifies cached and uncached paths/latencies are identical and
+reports the speedup (acceptance: >= 2x).
+"""
+from __future__ import annotations
+
+import random
+import time
+
+from benchmarks.common import FULL, emit, make_net
+
+N_PAIRS = 5000 if FULL else 2000
+
+
+def run():
+    net = make_net(n_planes=5, sats_per_plane=8)    # 40 satellites
+    g = net.graph_at(0.0)
+    ids = sorted(g.nodes)
+    rng = random.Random(0)
+    pairs = [(rng.choice(ids), rng.choice(ids)) for _ in range(N_PAIRS)]
+
+    mismatches = 0
+    for s, d in pairs[:500]:
+        if g.dijkstra(s, d) != g.dijkstra_uncached(s, d):
+            mismatches += 1
+
+    t0 = time.perf_counter()
+    for s, d in pairs:
+        g.dijkstra(s, d)
+    cached_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for s, d in pairs:
+        g.dijkstra_uncached(s, d)
+    uncached_s = time.perf_counter() - t0
+
+    cached_us = cached_s / N_PAIRS * 1e6
+    uncached_us = uncached_s / N_PAIRS * 1e6
+    derived = {
+        "uncached_us": round(uncached_us, 2),
+        "speedup_x": round(uncached_s / max(cached_s, 1e-12), 2),
+        "path_mismatches": mismatches,
+        "n_pairs": N_PAIRS,
+        "n_nodes": len(ids),
+    }
+    emit("bench_transfer", cached_us, derived)
+    return derived
+
+
+if __name__ == "__main__":
+    run()

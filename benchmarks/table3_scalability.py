@@ -21,14 +21,12 @@ def run():
         for strat in ("databelt", "stateless"):
             net = make_net()
             eng = WorkflowEngine(net, strategy=strat)
-            ms = eng.run_parallel(
+            rep = eng.run_parallel(
                 lambda wid: flood_workflow(wid), n, 2e6, stagger=0.05)
-            makespan = max(m.latency + i * 0.05
-                           for i, m in enumerate(ms))
             rows.append({
                 "parallel": n, "system": strat,
-                "latency_s": round(makespan, 2),
-                "rps": round(n / makespan, 4),
+                "latency_s": round(rep.makespan, 2),
+                "rps": round(rep.throughput_rps, 4),
             })
     d = {r["parallel"]: r for r in rows if r["system"] == "databelt"}
     s = {r["parallel"]: r for r in rows if r["system"] == "stateless"}

@@ -4,15 +4,24 @@ Reads resolve through the Databelt State Key: local hit (same node) costs
 only the KVS op; otherwise the value streams over the lowest-latency path.
 The global tier provides redundancy — every write also (asynchronously)
 lands in the cloud KVS, so a vanished local copy falls back there.
+
+Queueing happens on first-class simulation resources: each node's KVS is a
+capacity-1 ``SlotResource`` FIFO owned by a ``ResourcePool`` (shared with
+the workflow engine's CPU slots), so Databelt / random / stateless contend
+on the same queues under parallel load.  When a ``SimKernel`` is attached
+as ``scheduler``, the async global-replication leg becomes a real deferred
+event that hits the cloud KVS queue at its arrival time instead of being
+charged inline.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.keys import StateKey
 from repro.core.topology import CLOUD, TopologyGraph
+from repro.sim.resources import ResourcePool
 
 KVS_OP_LATENCY = 0.0008     # per-request local KVS overhead (seconds)
 KVS_READ_BW = 40e6          # bytes/s — Pi-class KVS read + deserialization
@@ -36,21 +45,23 @@ class AccessResult:
 
 
 class TwoTierStorage:
-    def __init__(self, graph_fn: Callable[[float], TopologyGraph]):
+    def __init__(self, graph_fn: Callable[[float], TopologyGraph],
+                 resources: Optional[ResourcePool] = None):
         self.graph_fn = graph_fn
         self.local: Dict[str, Dict[str, StoredState]] = {}
         self.global_store: Dict[str, StoredState] = {}
-        # per-node KVS service queue: requests serialize on the holder —
+        # per-node KVS service queues: requests serialize on the holder —
         # under parallel workflows the single cloud KVS becomes the
         # bottleneck for Stateless, while Databelt spreads load over
         # satellite-local stores (paper Table 3 / Fig 13)
-        self.busy_until: Dict[str, float] = {}
+        self.resources = resources or ResourcePool()
+        # an attached SimKernel turns async replication into deferred
+        # events; None falls back to inline accounting (sequential mode)
+        self.scheduler = None
 
     def _service(self, node: str, t: float, service_s: float) -> float:
         """FIFO queueing at the node's KVS; returns total (wait+service)."""
-        start = max(t, self.busy_until.get(node, 0.0))
-        self.busy_until[node] = start + service_s
-        return (start - t) + service_s
+        return self.resources.kvs(node).request(t, service_s) + service_s
 
     def _cloud(self, graph: TopologyGraph) -> Optional[str]:
         return next((n.id for n in graph.nodes.values()
@@ -83,21 +94,34 @@ class TwoTierStorage:
         ser = self._service(dst, t, KVS_OP_LATENCY + size / KVS_WRITE_BW)
         total = ser + lat
         if replicate_global:
-            # synchronous redundancy write to the cloud KVS (paper: write
-            # times are nearly system-independent because every system pays
-            # this cloud-bound leg)
+            # redundancy write to the cloud KVS (paper: write times are
+            # nearly system-independent because every system pays this
+            # cloud-bound leg)
             self.global_store[key.encoded()] = st
             cloud = self._cloud(graph)
             if cloud is not None and cloud != dst:
                 glat, _ = self._transfer(graph, src, cloud, size)
                 if math.isfinite(glat):
-                    gsrv = self._service(cloud, t + total + glat,
-                                         KVS_OP_LATENCY + size / KVS_WRITE_BW)
+                    service_s = KVS_OP_LATENCY + size / KVS_WRITE_BW
                     if global_sync:
-                        # stateless-style synchronous durability
+                        # stateless-style synchronous durability: the
+                        # cloud write is on the critical path
+                        gsrv = self._service(cloud, t + total + glat,
+                                             service_s)
                         total += glat + gsrv
-                    # else: async replication — occupies the cloud KVS
-                    # (queueing above) but stays off the critical path
+                    elif self.scheduler is not None:
+                        # async replication as a real deferred event: the
+                        # replica occupies the cloud KVS queue when it
+                        # arrives, off this writer's critical path
+                        arrive = t + total + glat
+                        cloud_q = self.resources.kvs(cloud)
+                        self.scheduler.call_at(
+                            arrive,
+                            lambda: cloud_q.request(arrive, service_s),
+                            label=f"replicate:{key.encoded()}")
+                    else:
+                        # sequential fallback: inline queue accounting
+                        self._service(cloud, t + total + glat, service_s)
         return AccessResult(total, hops, src == dst,
                             network_latency=lat)
 

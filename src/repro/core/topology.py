@@ -46,15 +46,28 @@ class Link:
 
 
 class TopologyGraph:
-    """Snapshot (or time-parameterized view) of the 3D continuum network."""
+    """Snapshot (or time-parameterized view) of the 3D continuum network.
+
+    Shortest paths are memoized per source node: one transfer-heavy
+    simulation step issues hundreds of ``dijkstra`` queries against the
+    same snapshot, so the first query from a source runs a full
+    single-source pass and later queries reconstruct paths from the cached
+    ``(dist, prev)`` trees.  Topology mutations through ``add_node`` /
+    ``add_link`` / ``remove_node`` bump a version counter that invalidates
+    the cache; code that pokes ``adj`` directly (e.g. graph *builders*
+    assembling a fresh snapshot) must finish mutating before querying."""
 
     def __init__(self):
         self.nodes: Dict[str, Node] = {}
         self.adj: Dict[str, Dict[str, Link]] = {}
+        self._version = 0
+        self._sssp: Dict[str, Tuple[int, Dict[str, float],
+                                    Dict[str, str]]] = {}
 
     def add_node(self, node: Node):
         self.nodes[node.id] = node
         self.adj.setdefault(node.id, {})
+        self._version += 1
 
     def add_link(self, src: str, dst: str, latency: float, bandwidth: float,
                  bidirectional: bool = True):
@@ -62,12 +75,14 @@ class TopologyGraph:
         if bidirectional:
             self.adj.setdefault(dst, {})[src] = Link(dst, src, latency,
                                                      bandwidth)
+        self._version += 1
 
     def remove_node(self, nid: str):
         self.nodes.pop(nid, None)
         self.adj.pop(nid, None)
         for a in self.adj.values():
             a.pop(nid, None)
+        self._version += 1
 
     def neighbors(self, nid: str):
         return self.adj.get(nid, {})
@@ -79,9 +94,51 @@ class TopologyGraph:
         return link.latency if link else math.inf
 
     # ------------------------------------------------------------------
+    def _sssp_from(self, src: str) -> Tuple[Dict[str, float],
+                                            Dict[str, str]]:
+        """Full single-source shortest-path pass from ``src``, memoized
+        against the current topology version."""
+        entry = self._sssp.get(src)
+        if entry is not None and entry[0] == self._version:
+            return entry[1], entry[2]
+        dist = {src: 0.0}
+        prev: Dict[str, str] = {}
+        pq = [(0.0, src)]
+        seen = set()
+        while pq:
+            d, u = heapq.heappop(pq)
+            if u in seen:
+                continue
+            seen.add(u)
+            for v, link in self.adj.get(u, {}).items():
+                if v in seen or v not in self.nodes:
+                    continue
+                nd = d + link.latency
+                if nd < dist.get(v, math.inf):
+                    dist[v] = nd
+                    prev[v] = u
+                    heapq.heappush(pq, (nd, v))
+        self._sssp[src] = (self._version, dist, prev)
+        return dist, prev
+
     def dijkstra(self, src: str, dst: str) -> Tuple[List[str], float]:
         """Lowest-latency path src -> dst.  Returns (path, total_latency);
-        ([], inf) when unreachable."""
+        ([], inf) when unreachable.  Served from the per-source cache."""
+        if src == dst:
+            return [src], 0.0
+        dist, prev = self._sssp_from(src)
+        if dst not in dist:
+            return [], math.inf
+        path = [dst]
+        while path[-1] != src:
+            path.append(prev[path[-1]])
+        path.reverse()
+        return path, dist[dst]
+
+    def dijkstra_uncached(self, src: str, dst: str
+                          ) -> Tuple[List[str], float]:
+        """Reference implementation (early-exit, no memoization) kept for
+        cache-consistency tests and the transfer microbenchmark."""
         if src == dst:
             return [src], 0.0
         dist = {src: 0.0}
@@ -122,4 +179,8 @@ class TopologyGraph:
         g = TopologyGraph()
         g.nodes = dict(self.nodes)
         g.adj = {k: dict(v) for k, v in self.adj.items()}
+        # share the SSSP cache (same topology); the copy's own dict + the
+        # version counter keep later mutations from cross-contaminating
+        g._version = self._version
+        g._sssp = dict(self._sssp)
         return g

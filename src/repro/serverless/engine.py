@@ -1,18 +1,23 @@
 """Workflow execution engine over the simulated 3D continuum.
 
-Event-driven: per-node FIFO occupancy models contention under parallel
-workflow executions (paper §6.3).  Function placement always uses the
-HyperDrive-style planner; the three *state* strategies (databelt / random /
-stateless) differ only in where produced state lands — isolating the paper's
-contribution exactly as its evaluation does.
+Discrete-event: every workflow instance is a process generator scheduled
+on a shared ``repro.sim.SimKernel`` event loop.  Per-node CPU slots and
+per-node KVS service queues are first-class ``SlotResource`` FIFOs in one
+``ResourcePool``, so parallel workflow executions contend for cores and
+storage exactly where the paper's evaluation does (§6.3, Tables 2/3,
+Fig 13).  Function placement always uses the HyperDrive-style planner; the
+three *state* strategies (databelt / random / stateless) differ only in
+where produced state lands — isolating the paper's contribution exactly as
+its evaluation does.
 
 Metrics per instance mirror the paper's Tables 2/3: total latency, state
 read/write time, mean state distance (hops), local availability, SLO
-violations, plus simulated CPU/RAM proxies.
+violations, plus simulated CPU/RAM proxies.  ``run_parallel`` drives n
+truly concurrent instances and reports fleet-level throughput, p50/p95/p99
+latency, and per-node queue depth (``repro.sim.ParallelReport``).
 """
 from __future__ import annotations
 
-import heapq
 import math
 import time as _time
 from dataclasses import dataclass, field
@@ -27,6 +32,10 @@ from repro.core.planner import WorkflowSpec, plan_workflow
 from repro.core.propagation import Databelt
 from repro.core.slo import SLO
 from repro.serverless.workflow import Workflow, make_payload
+from repro.sim.kernel import SimKernel
+from repro.sim.metrics import ParallelReport
+from repro.sim.resources import ResourcePool
+from repro.sim.workload import UniformStagger
 
 SANDBOX_INIT_S = 1.0   # Knative-class cold start per sandbox; fusion packs
                        # a whole group into one sandbox and its grouped
@@ -69,7 +78,12 @@ class WorkflowEngine:
         self.slo = slo
         self.fusion_depth = max(fusion_depth, 1)
         self.real_compute = real_compute
-        self.storage = TwoTierStorage(net.graph_at)
+        # one resource pool per engine: CPU slots (one per core) + KVS
+        # queues, shared with the storage layer so every strategy contends
+        # on the same queues
+        self.resources = ResourcePool(cpu_capacity=self._cpu_slots)
+        self.storage = TwoTierStorage(net.graph_at,
+                                      resources=self.resources)
         self.strategy = strategy
         if strategy == "databelt":
             self.placer = Databelt(net.graph_at, net.available, slo)
@@ -81,7 +95,12 @@ class WorkflowEngine:
                                              slo)
         else:
             raise ValueError(strategy)
-        self.node_busy_until: Dict[str, float] = {}
+        # planner load signal: mapping-like view over the CPU resources
+        self.node_busy_until = self.resources.busy_view(ResourcePool.CPU)
+
+    def _cpu_slots(self, node_id: str) -> int:
+        node = self.net.graph_at(0.0).nodes.get(node_id)
+        return max(1, int(node.cpu)) if node is not None else 1
 
     # ------------------------------------------------------------------
     def place_functions(self, wf: Workflow, t: float,
@@ -109,11 +128,13 @@ class WorkflowEngine:
         return plan.placement
 
     # ------------------------------------------------------------------
-    def run_instance(self, wf: Workflow, input_bytes: float, t0: float = 0.0,
-                     entry: str = "drone0") -> InstanceMetrics:
-        m = InstanceMetrics()
-        t = t0
-        placement = self.place_functions(wf, t, entry)
+    def _instance_proc(self, kernel: SimKernel, wf: Workflow,
+                       input_bytes: float, entry: str,
+                       m: InstanceMetrics):
+        """One workflow instance as a discrete-event process: yields timed
+        steps (and CPU acquire/release) on the shared kernel."""
+        t0 = kernel.now
+        placement = self.place_functions(wf, kernel.now, entry)
         order = wf.order()
         groups = plan_fusion_groups(order, placement,
                                     max_depth=self.fusion_depth)
@@ -124,7 +145,8 @@ class WorkflowEngine:
 
         # the workflow input arrives at the entry node
         src_key = StateKey(wf.workflow_id, entry, "__input__")
-        self.storage.put(src_key, input_bytes, None, t, writer_node=entry)
+        self.storage.put(src_key, input_bytes, None, kernel.now,
+                         writer_node=entry)
         keys["__input__"] = src_key
         sizes["__input__"] = input_bytes
         if self.real_compute:
@@ -132,8 +154,10 @@ class WorkflowEngine:
 
         for g in groups:
             node = g.node_id
-            # ---- queue on the node (contention model) ----
-            t = max(t, self.node_busy_until.get(node, 0.0))
+            # ---- claim a CPU slot on the node (contention model) ----
+            cpu = self.resources.cpu(node)
+            yield ("acquire", cpu)
+            kernel.log(f"{wf.workflow_id}:start:{g.group_id}")
             # ---- fused state fetch: inputs of every fn in the group ----
             need = []
             for fname in g.function_ids:
@@ -150,11 +174,11 @@ class WorkflowEngine:
                 if k.function_id == "__input__":
                     continue
                 m.handoffs += 1
-                if self._read_network_latency(k, node, t) \
+                if self._read_network_latency(k, node, kernel.now) \
                         > self.slo.max_handoff_s:
                     m.slo_violations += 1
             if fused:
-                sts, res = self.storage.get_fused(need, node, t)
+                sts, res = self.storage.get_fused(need, node, kernel.now)
                 m.storage_ops += len({k.storage_address for k in need
                                       if k.storage_address != node} or {1})
                 m.reads += len(need)
@@ -163,11 +187,11 @@ class WorkflowEngine:
                 m.read_time += res.latency
                 # one sandbox for the whole group; the grouped prefetch
                 # overlaps with sandbox init
-                t += max(SANDBOX_INIT_S, res.latency)
+                yield max(SANDBOX_INIT_S, res.latency)
             else:
                 lat_sum, hops_list, nloc = 0.0, [], 0
                 for k in need:
-                    _, r = self.storage.get(k, node, t)
+                    _, r = self.storage.get(k, node, kernel.now)
                     lat_sum += r.latency
                     hops_list.append(r.hops)
                     nloc += 1 if r.local else 0
@@ -177,10 +201,9 @@ class WorkflowEngine:
                 m.hops.extend(hops_list)
                 m.read_time += lat_sum
                 # one sandbox per function, synchronous per-function reads
-                t += SANDBOX_INIT_S * len(g.function_ids) + lat_sum
+                yield SANDBOX_INIT_S * len(g.function_ids) + lat_sum
 
             # ---- execute the fused functions ----
-            group_out_sizes = 0.0
             for fname in g.function_ids:
                 fn = wf.fn(fname)
                 preds = wf.predecessors(fname) or ["__input__"]
@@ -196,9 +219,8 @@ class WorkflowEngine:
                     payloads[fname] = fn.compute(merged) if merged else {}
                     ct += _time.perf_counter() - w0
                 m.compute_time += ct
-                t += ct
+                yield ct
                 sizes[fname] = in_bytes * fn.out_ratio
-                group_out_sizes += sizes[fname]
 
             # ---- state offload (per strategy) --------------------------
             # fused groups persist only their OUTGOING states (consumed
@@ -217,41 +239,45 @@ class WorkflowEngine:
                 dst = placement.get(nxt[0]) if nxt else None
                 if self.strategy == "databelt" and dst is not None:
                     self.placer.plan_state_placement(fname, node, dst,
-                                                     sizes[fname], t)
+                                                     sizes[fname],
+                                                     kernel.now)
                 key = StateKey(wf.workflow_id, node, fname)
-                key = self.placer.offload_state(fname, node, t, key)
+                key = self.placer.offload_state(fname, node, kernel.now,
+                                                key)
                 keys[fname] = key
             if fused:
                 merged = sum(max(sizes[f], 1.0) for f in outgoing)
                 first = keys[outgoing[-1]]
-                r = self.storage.put(first, merged, None, t,
+                r = self.storage.put(first, merged, None, kernel.now,
                                      writer_node=node,
                                      global_sync=self.strategy ==
                                      "stateless")
                 # register the remaining outgoing keys without re-charging
                 for f in outgoing[:-1]:
-                    self.storage.put(keys[f], max(sizes[f], 1.0), None, t,
-                                     writer_node=node,
+                    self.storage.put(keys[f], max(sizes[f], 1.0), None,
+                                     kernel.now, writer_node=node,
                                      replicate_global=True, account=False)
                 m.write_time += r.latency
                 m.storage_ops += 1
-                t += r.latency
+                yield r.latency
             else:
                 for fname in outgoing:
-                    r = self.storage.put(keys[fname], max(sizes[fname], 1.0),
-                                         None, t, writer_node=node,
+                    r = self.storage.put(keys[fname],
+                                         max(sizes[fname], 1.0),
+                                         None, kernel.now,
+                                         writer_node=node,
                                          global_sync=self.strategy ==
                                          "stateless")
                     m.write_time += r.latency
                     m.storage_ops += 1
-                    t += r.latency
-            self.node_busy_until[node] = t
+                    yield r.latency
+            kernel.log(f"{wf.workflow_id}:done:{g.group_id}")
+            yield ("release", cpu)
 
-        m.latency = t - t0
+        m.latency = kernel.now - t0
         # resource proxies (paper Table 2 reports flat ~16% CPU / ~1.4GB)
         m.cpu_pct = 16.0 + (1.0 if self.strategy == "databelt" else 0.0)
         m.ram_mb = 1320 if self.strategy == "databelt" else 1423
-        return m
 
     def _read_network_latency(self, key: StateKey, node: str,
                               t: float) -> float:
@@ -265,13 +291,75 @@ class WorkflowEngine:
         return 0.0 if src == node else lat
 
     # ------------------------------------------------------------------
+    def run_instance(self, wf: Workflow, input_bytes: float, t0: float = 0.0,
+                     entry: str = "drone0") -> InstanceMetrics:
+        """Run ONE instance to completion on a private event loop (shared
+        storage + resource queues, so sequential calls still observe each
+        other's leftover backlog, as on a long-lived deployment)."""
+        kernel = SimKernel(start=t0)
+        m = InstanceMetrics()
+        kernel.spawn(self._instance_proc(kernel, wf, input_bytes, entry, m),
+                     label=wf.workflow_id)
+        self.storage.scheduler = kernel
+        try:
+            kernel.run()
+        finally:
+            self.storage.scheduler = None
+        return m
+
+    # ------------------------------------------------------------------
     def run_parallel(self, wf_maker, n: int, input_bytes: float,
-                     t0: float = 0.0, stagger: float = 0.05):
-        """n concurrent workflow instances; returns list of metrics.
-        Contention comes from the shared per-node FIFO occupancy."""
-        out = []
-        for i in range(n):
-            wf = wf_maker(f"wf{i}")
-            out.append(self.run_instance(wf, input_bytes,
-                                         t0 + i * stagger))
-        return out
+                     t0: float = 0.0, stagger: float = 0.05,
+                     entry: str = "drone0", workload=None,
+                     record_trace: bool = False) -> ParallelReport:
+        """n truly concurrent workflow instances on one shared event loop.
+
+        ``workload`` is a ``repro.sim.workload`` generator (default:
+        ``UniformStagger(stagger)``).  Returns a ``ParallelReport`` with
+        per-instance metrics (list-indexable for compatibility) plus
+        throughput, p50/p95/p99 latency and per-node queue statistics.
+        Use a fresh engine per call when comparing runs — resource queues
+        accumulate over the engine's lifetime."""
+        kernel = SimKernel(start=t0, record_trace=record_trace)
+        results: List[tuple] = []
+
+        def wrap(i: int):
+            def proc():
+                wf = wf_maker(f"wf{i}")
+                start = kernel.now
+                m = InstanceMetrics()
+                yield from self._instance_proc(kernel, wf, input_bytes,
+                                               entry, m)
+                results.append((i, m, start, kernel.now))
+            return proc()
+
+        workload = workload or UniformStagger(stagger)
+        if getattr(workload, "closed", False):
+            idx = 0
+            for c, count in enumerate(workload.per_client(n)):
+                ids = list(range(idx, idx + count))
+                idx += count
+
+                def client(ids=ids):
+                    for i in ids:
+                        yield from wrap(i)
+                        if workload.think_time > 0:
+                            yield workload.think_time
+                kernel.spawn(client(), label=f"client{c}")
+        else:
+            for i, at in enumerate(workload.arrivals(n, t0)):
+                kernel.spawn(wrap(i), label=f"wf{i}", at=at)
+
+        self.storage.scheduler = kernel
+        try:
+            kernel.run()
+        finally:
+            self.storage.scheduler = None
+        results.sort(key=lambda r: r[0])
+        return ParallelReport.build(
+            instances=[r[1] for r in results],
+            start_times=[r[2] for r in results],
+            end_times=[r[3] for r in results],
+            pool=self.resources,
+            events_processed=kernel.events_processed,
+            trace=kernel.trace)

@@ -1,0 +1,132 @@
+"""Discrete-event simulation kernel for the 3D-continuum simulator.
+
+A ``SimKernel`` owns a simulated clock and an event heap.  Work is
+expressed as *processes*: plain Python generators that ``yield`` either
+
+* a non-negative float — sleep that many simulated seconds;
+* ``("acquire", resource)`` — claim a ``SlotResource`` server, blocking
+  FIFO until one frees up;
+* ``("release", resource)`` — give the server back, waking the head
+  waiter (the process itself continues at the same instant).
+
+The kernel interleaves all live processes in global time order, which is
+what turns N workflow instances into genuinely *concurrent* executions — a
+process that sleeps through a storage transfer observes every queue
+mutation other processes made in the meantime.
+
+Determinism rules (guarded, not assumed):
+
+* No wall clock.  The kernel never reads ``time.*``; simulated time only
+  advances by popping the heap.  Negative delays raise.
+* Ties break on a monotonically increasing sequence number, so two runs
+  with the same seed produce bit-identical event orders.
+* With ``record_trace=True`` every event append is logged as
+  ``(time, seq, label)``; two runs of the same seeded workload must produce
+  identical traces (see ``tests/test_sim_kernel.py``).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Callable, Generator, List, Optional, Tuple
+
+Trace = List[Tuple[float, int, str]]
+
+
+class SimKernel:
+    """Event-heap scheduler driving generator processes in simulated time."""
+
+    def __init__(self, start: float = 0.0, record_trace: bool = False):
+        self.now = float(start)
+        self._heap: list = []          # (time, seq, kind, payload)
+        self._seq = 0
+        self.events_processed = 0
+        self.trace: Optional[Trace] = [] if record_trace else None
+
+    # -- scheduling ------------------------------------------------------
+    def _push(self, t: float, kind: str, payload, label: str):
+        if t < self.now - 1e-12:
+            raise ValueError(
+                f"event scheduled in the past: t={t} < now={self.now}")
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, kind, payload, label))
+        if self.trace is not None:
+            self.trace.append((t, self._seq, f"schedule:{label}"))
+
+    def call_at(self, t: float, fn: Callable[[], None],
+                label: str = "call") -> None:
+        """Run ``fn()`` at absolute simulated time ``t`` (deferred event —
+        e.g. an async global-replication write arriving at the cloud KVS)."""
+        self._push(max(t, self.now), "call", fn, label)
+
+    def call_later(self, delay: float, fn: Callable[[], None],
+                   label: str = "call") -> None:
+        self.call_at(self.now + delay, fn, label)
+
+    def spawn(self, proc: Generator, label: str = "proc",
+              at: Optional[float] = None) -> None:
+        """Register a process generator; it first runs at ``at`` (default:
+        now).  The generator yields non-negative delays in seconds."""
+        t = self.now if at is None else at
+        self._push(t, "proc", proc, label)
+
+    def log(self, label: str) -> None:
+        """Record a named point-event in the trace at the current time."""
+        if self.trace is not None:
+            self._seq += 1
+            self.trace.append((self.now, self._seq, label))
+
+    # -- driving ---------------------------------------------------------
+    def _step_proc(self, proc: Generator, label: str):
+        try:
+            item = next(proc)
+        except StopIteration:
+            return
+        if isinstance(item, tuple):
+            op, res = item
+            if op == "acquire":
+                if res.hold(self.now):
+                    if self.trace is not None:
+                        self.log(f"grant:{label}@{res.name}")
+                    self._push(self.now, "proc", proc, label)
+                else:
+                    res.enqueue_waiter(proc, label, self.now)
+                    if self.trace is not None:
+                        self.log(f"wait:{label}@{res.name}")
+                return
+            if op == "release":
+                if self.trace is not None:
+                    self.log(f"free:{label}@{res.name}")
+                woken = res.unhold(self.now)
+                if woken is not None:
+                    wproc, wlabel = woken
+                    if self.trace is not None:
+                        self.log(f"grant:{wlabel}@{res.name}")
+                    self._push(self.now, "proc", wproc, wlabel)
+                self._push(self.now, "proc", proc, label)
+                return
+            raise ValueError(f"process {label!r} yielded unknown op "
+                             f"{op!r}")
+        delay = 0.0 if item is None else float(item)
+        if delay < 0.0:
+            raise ValueError(f"process {label!r} yielded negative delay "
+                             f"{delay}")
+        self._push(self.now + delay, "proc", proc, label)
+
+    def run(self, until: Optional[float] = None) -> float:
+        """Pop events in (time, seq) order until the heap drains (or
+        simulated time passes ``until``).  Returns the final clock."""
+        while self._heap:
+            t, seq, kind, payload, label = self._heap[0]
+            if until is not None and t > until:
+                break
+            heapq.heappop(self._heap)
+            assert t >= self.now - 1e-12, "event heap went backwards"
+            self.now = max(self.now, t)
+            self.events_processed += 1
+            if self.trace is not None:
+                self.trace.append((self.now, seq, f"fire:{label}"))
+            if kind == "proc":
+                self._step_proc(payload, label)
+            else:
+                payload()
+        return self.now

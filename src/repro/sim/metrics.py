@@ -1,0 +1,86 @@
+"""Aggregate metrics for concurrent simulation runs."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    """Linear-interpolated percentile (p in [0, 100]); 0.0 on empty."""
+    xs = sorted(xs)
+    if not xs:
+        return 0.0
+    if len(xs) == 1:
+        return xs[0]
+    rank = (p / 100.0) * (len(xs) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = rank - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+@dataclass
+class ParallelReport:
+    """Result of a concurrent driver run: per-instance metrics plus the
+    fleet-level numbers the paper reports (throughput, tail latency) and
+    per-node queue statistics from the resource pool.
+
+    Indexing/iteration delegate to ``instances`` so existing callers that
+    treated ``run_parallel``'s result as a list keep working."""
+
+    instances: List = field(default_factory=list)
+    start_times: List[float] = field(default_factory=list)
+    end_times: List[float] = field(default_factory=list)
+    makespan: float = 0.0
+    throughput_rps: float = 0.0
+    p50: float = 0.0
+    p95: float = 0.0
+    p99: float = 0.0
+    kvs_queues: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    cpu_queues: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    events_processed: int = 0
+    trace: Optional[list] = None
+
+    @property
+    def latencies(self) -> List[float]:
+        return [m.latency for m in self.instances]
+
+    @property
+    def mean_latency(self) -> float:
+        ls = self.latencies
+        return sum(ls) / len(ls) if ls else 0.0
+
+    def max_kvs_depth(self, node: str) -> int:
+        return int(self.kvs_queues.get(node, {}).get("max_queue_depth", 0))
+
+    @classmethod
+    def build(cls, instances, start_times, end_times, pool=None,
+              events_processed: int = 0, trace=None) -> "ParallelReport":
+        lats = [m.latency for m in instances]
+        t0 = min(start_times) if start_times else 0.0
+        t1 = max(end_times) if end_times else 0.0
+        makespan = max(t1 - t0, 0.0)
+        return cls(
+            instances=list(instances),
+            start_times=list(start_times),
+            end_times=list(end_times),
+            makespan=makespan,
+            throughput_rps=len(instances) / makespan if makespan > 0
+            else 0.0,
+            p50=percentile(lats, 50), p95=percentile(lats, 95),
+            p99=percentile(lats, 99),
+            kvs_queues=pool.queue_stats(pool.KVS) if pool else {},
+            cpu_queues=pool.queue_stats(pool.CPU) if pool else {},
+            events_processed=events_processed,
+            trace=trace,
+        )
+
+    # list-compat -------------------------------------------------------
+    def __len__(self):
+        return len(self.instances)
+
+    def __iter__(self):
+        return iter(self.instances)
+
+    def __getitem__(self, i):
+        return self.instances[i]

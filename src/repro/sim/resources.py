@@ -1,0 +1,175 @@
+"""First-class simulated resources: per-node CPU slots and KVS queues.
+
+``SlotResource`` is a deterministic c-server FIFO queue used in one of two
+styles (one style per resource):
+
+* **analytic jobs** — ``request(t, service_s)`` for work whose service
+  time is known up front (a KVS read/write).  Returns the queueing delay;
+  the caller sleeps ``wait + service_s`` on the kernel.  Arrival order is
+  the kernel's event order, so the per-slot free-time accounting is exact.
+* **held slots** — for work whose duration is only known at the end (a
+  sandbox executing a fusion group).  Processes ``yield ("acquire", res)``
+  and ``yield ("release", res)``; the ``SimKernel`` grants slots FIFO and
+  wakes the head waiter on release.
+
+``ResourcePool`` owns every resource of one engine, keyed by
+``(kind, node_id)`` — the engine's per-node CPU slots and the storage
+layer's per-node KVS service queues live in the *same* pool, which is what
+makes the three state strategies contend realistically.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from typing import Callable, Dict, Optional, Tuple
+
+
+class SlotResource:
+    """Deterministic FIFO queue with ``capacity`` parallel servers."""
+
+    def __init__(self, name: str, capacity: int = 1):
+        self.name = name
+        self.capacity = max(1, int(capacity))
+        self._free_at = [0.0] * self.capacity   # analytic-job slot frees
+        heapq.heapify(self._free_at)
+        self._in_system: list = []              # ends of analytic jobs
+        self._waiting: list = []                # starts of queued analytic
+        self._held = 0                          # granted held slots
+        self._wait_q: deque = deque()           # (proc, label, t_enqueued)
+        # stats
+        self.n_requests = 0
+        self.total_wait = 0.0
+        self.total_service = 0.0
+        self.max_queue_depth = 0       # max jobs/processes waiting
+        self.max_in_system = 0         # max queued-or-in-service
+        self.last_busy_t = 0.0
+
+    # -- analytic one-shot jobs -----------------------------------------
+    def _observe(self, t: float):
+        while self._in_system and self._in_system[0] <= t:
+            heapq.heappop(self._in_system)
+        while self._waiting and self._waiting[0] <= t:
+            heapq.heappop(self._waiting)
+
+    def depth(self, t: float) -> int:
+        """Jobs queued or in service at time ``t``."""
+        self._observe(t)
+        return len(self._in_system) + self._held + len(self._wait_q)
+
+    def request(self, t: float, service_s: float) -> float:
+        """FIFO-enqueue a job of ``service_s``; returns the queueing wait.
+        The job occupies a server during [t + wait, t + wait + service_s)."""
+        self._observe(t)
+        start = max(t, heapq.heappop(self._free_at))
+        end = start + service_s
+        heapq.heappush(self._free_at, end)
+        heapq.heappush(self._in_system, end)
+        if start > t:
+            heapq.heappush(self._waiting, start)
+        self.n_requests += 1
+        self.total_wait += start - t
+        self.total_service += service_s
+        self.max_queue_depth = max(self.max_queue_depth, len(self._waiting))
+        self.max_in_system = max(self.max_in_system, len(self._in_system))
+        self.last_busy_t = max(self.last_busy_t, end)
+        return start - t
+
+    # -- held slots (driven by SimKernel) --------------------------------
+    def hold(self, t: float) -> bool:
+        """Grant a slot immediately if one is free; called by the kernel
+        when a process yields ("acquire", self)."""
+        if self._held < self.capacity:
+            self._held += 1
+            self.n_requests += 1
+            self.max_in_system = max(self.max_in_system,
+                                     self._held + len(self._wait_q))
+            return True
+        return False
+
+    def enqueue_waiter(self, proc, label: str, t: float) -> None:
+        self._wait_q.append((proc, label, t))
+        self.max_queue_depth = max(self.max_queue_depth, len(self._wait_q))
+        self.max_in_system = max(self.max_in_system,
+                                 self._held + len(self._wait_q))
+
+    def unhold(self, t: float):
+        """Release a held slot at ``t``; returns the woken head waiter as
+        (proc, label) — the slot transfers to it — or None."""
+        if self._held <= 0:
+            raise RuntimeError(f"release without acquire on {self.name}")
+        self.last_busy_t = max(self.last_busy_t, t)
+        if self._wait_q:
+            proc, label, t_enq = self._wait_q.popleft()
+            self.n_requests += 1
+            self.total_wait += t - t_enq
+            return proc, label
+        self._held -= 1
+        return None
+
+    # -- planner view ----------------------------------------------------
+    def next_free(self) -> float:
+        """Load signal for the placement planner: earliest projected
+        availability.  Exact for analytic queues; for held slots a
+        saturation heuristic (last completion + pressure per waiter)."""
+        base = self._free_at[0] if self._free_at else 0.0
+        if self._held >= self.capacity:
+            base = max(base, self.last_busy_t) + \
+                0.25 * (len(self._wait_q) + 1)
+        return base
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "requests": self.n_requests,
+            "total_wait_s": round(self.total_wait, 6),
+            "total_service_s": round(self.total_service, 6),
+            "mean_wait_s": round(self.total_wait / max(self.n_requests, 1),
+                                 6),
+            "max_queue_depth": self.max_queue_depth,
+            "max_in_system": self.max_in_system,
+        }
+
+
+class _BusyView:
+    """Read-only mapping adapter (``.get(node, default)``) exposing a
+    resource kind's earliest-free times to the placement planner."""
+
+    def __init__(self, pool: "ResourcePool", kind: str):
+        self._pool = pool
+        self._kind = kind
+
+    def get(self, node: str, default: float = 0.0) -> float:
+        res = self._pool.peek(self._kind, node)
+        return res.next_free() if res is not None else default
+
+
+class ResourcePool:
+    """All simulated resources of one engine, keyed by (kind, node)."""
+
+    CPU, KVS = "cpu", "kvs"
+
+    def __init__(self, cpu_capacity: Optional[Callable[[str], int]] = None):
+        self._res: Dict[Tuple[str, str], SlotResource] = {}
+        self._cpu_capacity = cpu_capacity or (lambda node: 1)
+
+    def peek(self, kind: str, node: str) -> Optional[SlotResource]:
+        return self._res.get((kind, node))
+
+    def _get(self, kind: str, node: str, capacity: int) -> SlotResource:
+        key = (kind, node)
+        res = self._res.get(key)
+        if res is None:
+            res = self._res[key] = SlotResource(f"{kind}:{node}", capacity)
+        return res
+
+    def cpu(self, node: str) -> SlotResource:
+        return self._get(self.CPU, node, self._cpu_capacity(node))
+
+    def kvs(self, node: str) -> SlotResource:
+        return self._get(self.KVS, node, 1)
+
+    def busy_view(self, kind: str = CPU) -> _BusyView:
+        return _BusyView(self, kind)
+
+    def queue_stats(self, kind: str = KVS) -> Dict[str, Dict[str, float]]:
+        return {node: res.stats() for (k, node), res in sorted(
+            self._res.items()) if k == kind}

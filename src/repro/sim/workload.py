@@ -1,0 +1,59 @@
+"""Workload generators for the concurrent driver.
+
+Open-loop generators fix arrival times in advance (requests keep coming no
+matter how the system is doing — the throughput-measurement regime of
+paper Fig 13); the closed-loop generator models a fixed client pool where a
+client only issues its next workflow after the previous one completed.
+
+All randomness flows through a seeded ``random.Random`` so the same seed
+reproduces the identical arrival sequence (and, through the kernel's
+deterministic event order, the identical event trace).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import List
+
+
+@dataclass
+class UniformStagger:
+    """Open loop: instance i arrives at ``start + i * stagger``."""
+    stagger: float = 0.05
+    closed = False
+
+    def arrivals(self, n: int, start: float = 0.0) -> List[float]:
+        return [start + i * self.stagger for i in range(n)]
+
+
+@dataclass
+class OpenLoopPoisson:
+    """Open loop with exponential inter-arrival gaps (rate per second)."""
+    rate: float = 10.0
+    seed: int = 0
+    closed = False
+
+    def arrivals(self, n: int, start: float = 0.0) -> List[float]:
+        rng = random.Random(self.seed)
+        t, out = start, []
+        for _ in range(n):
+            out.append(t)
+            t += rng.expovariate(self.rate)
+        return out
+
+    def __hash__(self):
+        return hash((self.rate, self.seed))
+
+
+@dataclass
+class ClosedLoop:
+    """``clients`` concurrent clients, each running instances back-to-back
+    with an optional think time; n total instances are split round-robin."""
+    clients: int = 4
+    think_time: float = 0.0
+    closed = True
+
+    def per_client(self, n: int) -> List[int]:
+        base, extra = divmod(n, max(self.clients, 1))
+        return [base + (1 if i < extra else 0)
+                for i in range(max(self.clients, 1))]
