@@ -13,14 +13,16 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_kernels, bench_transfer, fig2_state_share,
                             fig10_availability, fig13_throughput,
-                            fig16_service_scale, table2_propagation,
-                            table3_scalability, table4_fusion)
+                            fig14_autoscale, fig16_service_scale,
+                            table2_propagation, table3_scalability,
+                            table4_fusion)
     benches = [
         ("fig2_state_share", fig2_state_share.run),
         ("table2_propagation", table2_propagation.run),
         ("fig10_availability", fig10_availability.run),
         ("table3_scalability", table3_scalability.run),
         ("fig13_throughput", fig13_throughput.run),
+        ("fig14_autoscale", fig14_autoscale.run),
         ("table4_fusion", table4_fusion.run),
         ("fig16_service_scale", fig16_service_scale.run),
         ("bench_transfer", bench_transfer.run),

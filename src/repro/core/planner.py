@@ -61,22 +61,43 @@ class Plan:
 
 def vicinity(graph: TopologyGraph, center: str, radius_s: float,
              limit: int = 64) -> List[str]:
-    """Nodes within ``radius_s`` seconds of latency of ``center``
-    (BFS-by-latency, pruned at ``limit`` candidates)."""
+    """Nodes within ``radius_s`` seconds of latency of ``center``, nearest
+    first (ties on node id), pruned at ``limit`` candidates.
+
+    Resolved from the per-source SSSP tree ``TopologyGraph`` already caches
+    for ``dijkstra`` — one pass serves every placement query from the same
+    anchor instead of re-walking the graph per function.  Distances are
+    exact shortest paths (the old standalone BFS froze a node's distance at
+    the first push, overestimating on multi-path topologies)."""
+    dist, _ = graph.sssp(center)
+    near = sorted((d, n) for n, d in dist.items()
+                  if d <= radius_s and n in graph.nodes)
+    return [n for _, n in near[:limit]]
+
+
+def vicinity_uncached(graph: TopologyGraph, center: str, radius_s: float,
+                      limit: int = 64) -> List[str]:
+    """Reference implementation: exact Dijkstra ball around ``center`` with
+    no memoization.  Kept for cache-consistency tests (must stay
+    path-identical to ``vicinity``)."""
     import heapq
-    out, seen = [], {center}
+    dist = {center: 0.0}
     pq = [(0.0, center)]
-    while pq and len(out) < limit:
+    seen = set()
+    while pq:
         d, u = heapq.heappop(pq)
-        out.append(u)
+        if u in seen:
+            continue
+        seen.add(u)
         for v, link in graph.neighbors(u).items():
             if v in seen or v not in graph.nodes:
                 continue
             nd = d + link.latency
-            if nd <= radius_s:
-                seen.add(v)
+            if nd <= radius_s and nd < dist.get(v, math.inf):
+                dist[v] = nd
                 heapq.heappush(pq, (nd, v))
-    return out
+    near = sorted((d, n) for n, d in dist.items() if n in graph.nodes)
+    return [n for _, n in near[:limit]]
 
 
 COMPUTE_KINDS = ("satellite", "cloud", "edge", "ground")

@@ -121,6 +121,12 @@ class TopologyGraph:
         self._sssp[src] = (self._version, dist, prev)
         return dist, prev
 
+    def sssp(self, src: str) -> Tuple[Dict[str, float], Dict[str, str]]:
+        """Cached single-source shortest-path tree from ``src``:
+        ``(dist, prev)`` over every reachable node.  The planner's vicinity
+        sampling and ``dijkstra`` both resolve from this one pass."""
+        return self._sssp_from(src)
+
     def dijkstra(self, src: str, dst: str) -> Tuple[List[str], float]:
         """Lowest-latency path src -> dst.  Returns (path, total_latency);
         ([], inf) when unreachable.  Served from the per-source cache."""

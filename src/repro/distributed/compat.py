@@ -1,0 +1,22 @@
+"""jax API-drift shims for the distribution layer.
+
+``jax.shard_map`` (with ``check_vma=``) only exists on newer jax; older
+installs ship it as ``jax.experimental.shard_map.shard_map`` (with
+``check_rep=``).  All repo code shards through this wrapper so either
+API works — the mesh-construction side of the same drift lives in
+``repro.launch.mesh.make_mesh``.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check)

@@ -65,11 +65,11 @@ def pipeline_apply(stage_params, x, stage_fn: Callable, mesh: Mesh,
         return out.reshape(B, *xl.shape[1:])
 
     pspec = jax.tree.map(lambda t: P(axis), stage_params)
-    return jax.shard_map(
+    from repro.distributed.compat import shard_map
+    return shard_map(
         body, mesh=mesh,
         in_specs=(pspec, P()),
         out_specs=P(),
-        check_vma=False,
     )(stage_params, x)
 
 

@@ -1,16 +1,36 @@
-"""Production mesh builders (functions — importing never touches devices)."""
+"""Production mesh builders (functions — importing never touches devices).
+
+``make_mesh`` wraps ``jax.make_mesh`` across the API drift around
+``jax.sharding.AxisType``: newer jax versions accept (and eventually
+expect) ``axis_types=``, while e.g. 0.4.37 has neither the enum nor the
+keyword.  All repo code and tests build meshes through this helper so a
+jax upgrade/downgrade never breaks mesh construction again.
+"""
 from __future__ import annotations
 
+from typing import Optional, Sequence
+
 import jax
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices: Optional[Sequence] = None):
+    """Version-compatible ``jax.make_mesh``: passes ``axis_types`` (all
+    ``Auto``) only when the installed jax still exposes the enum."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips (v5e pod).  Multi-pod: 2 pods = 512."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 2, model: int = 4):
@@ -18,6 +38,4 @@ def make_local_mesh(data: int = 2, model: int = 4):
     n = len(jax.devices())
     if data * model > n:
         data, model = 1, n
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

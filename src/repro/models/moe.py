@@ -85,30 +85,48 @@ def _expert_ffn(bufs, p, act):
 # ---------------------------------------------------------------------------
 # oracle path
 # ---------------------------------------------------------------------------
-def moe_dense(params, x, cfg: ModelConfig):
+def moe_dense(params, x, cfg: ModelConfig, groups: int = 1):
+    """One-hot-free dispatch oracle.  ``groups`` splits the tokens into
+    contiguous capacity groups with per-group overflow dropping (GShard
+    semantics): the sharded path competes tokens for expert capacity only
+    within one data shard, so a parity comparison against it must pass
+    ``groups = <data shards>`` — with the default 1 the whole batch is a
+    single group (the standalone / smoke-test behaviour)."""
     m = cfg.moe
     B, S, D = x.shape
     T = B * S
     xf = x.reshape(T, D)
     gate, idx, probs = _route(xf, params["router"], m.experts_per_token)
-    C = _capacity(T, m.experts_per_token, m.n_experts, m.capacity_factor)
+    if groups < 1 or T % groups != 0:
+        raise ValueError(
+            f"groups={groups} must evenly divide the {T} tokens")
+    G = groups
+    Tg = T // G
+    C = _capacity(Tg, m.experts_per_token, m.n_experts, m.capacity_factor)
+    k_top = m.experts_per_token
 
-    flat_e = idx.reshape(-1)
-    order = jnp.argsort(flat_e, stable=True)
-    sorted_e = flat_e[order]
-    starts = jnp.searchsorted(sorted_e, jnp.arange(m.n_experts))
-    pos = jnp.arange(T * m.experts_per_token) - starts[sorted_e]
-    keep = pos < C
-    e_idx = jnp.where(keep, sorted_e, m.n_experts)       # OOB -> dropped
-    p_idx = jnp.where(keep, pos, C)
-    tok = order // m.experts_per_token
+    def dispatch_group(xg, gate_g, idx_g):
+        flat_e = idx_g.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        starts = jnp.searchsorted(sorted_e, jnp.arange(m.n_experts))
+        pos = jnp.arange(Tg * k_top) - starts[sorted_e]
+        keep = pos < C
+        e_idx = jnp.where(keep, sorted_e, m.n_experts)   # OOB -> dropped
+        p_idx = jnp.where(keep, pos, C)
+        tok = order // k_top
 
-    buf = jnp.zeros((m.n_experts, C, D), x.dtype)
-    buf = buf.at[e_idx, p_idx].set(xf[tok], mode="drop")
-    out_buf = _expert_ffn(buf, params, activation(cfg.act))
-    contrib = out_buf.at[e_idx, p_idx].get(mode="fill", fill_value=0.0)
-    w = gate.reshape(-1)[order][:, None] * keep[:, None]
-    y = jnp.zeros((T, D), x.dtype).at[tok].add((contrib * w).astype(x.dtype))
+        buf = jnp.zeros((m.n_experts, C, D), x.dtype)
+        buf = buf.at[e_idx, p_idx].set(xg[tok], mode="drop")
+        out_buf = _expert_ffn(buf, params, activation(cfg.act))
+        contrib = out_buf.at[e_idx, p_idx].get(mode="fill", fill_value=0.0)
+        w = gate_g.reshape(-1)[order][:, None] * keep[:, None]
+        return jnp.zeros((Tg, D), x.dtype).at[tok].add(
+            (contrib * w).astype(x.dtype))
+
+    y = jax.vmap(dispatch_group)(
+        xf.reshape(G, Tg, D), gate.reshape(G, Tg, k_top),
+        idx.reshape(G, Tg, k_top)).reshape(T, D)
     y = y.reshape(B, S, D)
     if "dense" in params:
         from repro.models.modules import mlp
@@ -232,11 +250,11 @@ def moe_sharded(params, x, cfg: ModelConfig, decode: bool = False):
         aux = jax.lax.pmean(aux, tuple(mesh.axis_names))
         return y, aux
 
-    y, aux = jax.shard_map(
+    from repro.distributed.compat import shard_map
+    y, aux = shard_map(
         body, mesh=mesh,
         in_specs=(in_spec, P(), wg_spec, wg_spec, wd_spec),
         out_specs=(out_spec, P()),
-        check_vma=False,
     )(x, params["router"], params["w_gate"], params["w_up"],
       params["w_down"])
     if "dense" in params:

@@ -32,6 +32,7 @@ from repro.core.planner import WorkflowSpec, plan_workflow
 from repro.core.propagation import Databelt
 from repro.core.slo import SLO
 from repro.serverless.workflow import Workflow, make_payload
+from repro.sim.autoscale import AutoscalePolicy, Autoscaler
 from repro.sim.kernel import SimKernel
 from repro.sim.metrics import ParallelReport
 from repro.sim.resources import ResourcePool
@@ -311,7 +312,9 @@ class WorkflowEngine:
     def run_parallel(self, wf_maker, n: int, input_bytes: float,
                      t0: float = 0.0, stagger: float = 0.05,
                      entry: str = "drone0", workload=None,
-                     record_trace: bool = False) -> ParallelReport:
+                     record_trace: bool = False,
+                     autoscale: Optional[AutoscalePolicy] = None
+                     ) -> ParallelReport:
         """n truly concurrent workflow instances on one shared event loop.
 
         ``workload`` is a ``repro.sim.workload`` generator (default:
@@ -319,8 +322,17 @@ class WorkflowEngine:
         per-instance metrics (list-indexable for compatibility) plus
         throughput, p50/p95/p99 latency and per-node queue statistics.
         Use a fresh engine per call when comparing runs — resource queues
-        accumulate over the engine's lifetime."""
+        accumulate over the engine's lifetime.
+
+        ``autoscale`` attaches an SLO-aware capacity controller: a daemon
+        process on the same kernel that grows/shrinks the per-node CPU and
+        KVS pools from observed queue depth and the rolling p95 of
+        completed instances (``repro.sim.autoscale``).  The run stays
+        deterministically replayable; the report carries the controller's
+        actions in ``report.autoscale``."""
         kernel = SimKernel(start=t0, record_trace=record_trace)
+        scaler = Autoscaler(kernel, self.resources, autoscale).start() \
+            if autoscale is not None else None
         results: List[tuple] = []
 
         def wrap(i: int):
@@ -331,6 +343,8 @@ class WorkflowEngine:
                 yield from self._instance_proc(kernel, wf, input_bytes,
                                                entry, m)
                 results.append((i, m, start, kernel.now))
+                if scaler is not None:
+                    scaler.observe_latency(m.latency)
             return proc()
 
         workload = workload or UniformStagger(stagger)
@@ -362,4 +376,5 @@ class WorkflowEngine:
             end_times=[r[3] for r in results],
             pool=self.resources,
             events_processed=kernel.events_processed,
-            trace=kernel.trace)
+            trace=kernel.trace,
+            autoscale=scaler.report() if scaler is not None else None)

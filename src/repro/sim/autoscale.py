@@ -1,0 +1,176 @@
+"""SLO-aware autoscaling on the discrete-event kernel.
+
+The ``Autoscaler`` is a *daemon process* on the ``SimKernel``: every
+``interval_s`` of simulated time it samples each managed ``SlotResource``
+(per-node CPU-slot pools and KVS service queues in the engine's
+``ResourcePool``) plus the rolling p95 of recently completed workflow
+instances, and resizes capacities with the classic asymmetric rule pair:
+
+* **scale up fast** — when a queue's waiting depth exceeds
+  ``queue_high x capacity`` (or any backlog exists while the rolling p95
+  breaches ``p95_slo_s``), capacity doubles immediately, capped at
+  ``max_capacity``.  Newly added servers admit parked waiters in the same
+  event (``SlotResource.set_capacity`` returns them; the autoscaler
+  ``kernel.wake()``s each).
+* **scale down with hysteresis** — only after ``scale_down_after``
+  *consecutive* calm intervals (no waiters, at most half the servers busy)
+  does capacity step down by 25%.  The shrink floor is the resource's
+  *initial* capacity (initial capacities model provisioned hardware —
+  a node's cores, its baseline KVS service — which the controller can
+  exceed but never decommission); ``min_capacity`` can only raise that
+  floor.  A single busy interval resets the streak, so oscillating load
+  cannot thrash capacity.
+
+Shrinks drain: ``SlotResource`` retires servers as they free and excess
+held slots fall away one release at a time — in-flight work is never
+preempted.  Every decision is a pure function of simulated state, so runs
+with the autoscaler enabled stay deterministically replayable; actions are
+``kernel.log``-ed into the event trace and collected for the
+``ParallelReport``.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.sim.kernel import SimKernel
+from repro.sim.metrics import percentile
+from repro.sim.resources import ResourcePool, SlotResource
+
+
+@dataclass
+class AutoscalePolicy:
+    """Knobs of the control loop (see module docstring for the rules)."""
+    interval_s: float = 0.5        # control period (simulated seconds)
+    queue_high: float = 2.0        # waiting-per-server ratio that trips
+                                   # a scale-up
+    p95_slo_s: Optional[float] = None  # rolling-p95 target; a breach makes
+                                   # any backlog trip a scale-up
+    scale_down_after: int = 4      # consecutive calm intervals before a
+                                   # shrink (hysteresis)
+    shrink_frac: float = 0.25      # capacity fraction removed per shrink
+    min_capacity: int = 1          # raises the shrink floor above a
+                                   # resource's initial capacity; it can
+                                   # never lower it (initial = provisioned
+                                   # hardware)
+    max_capacity: int = 64         # growth ceiling per resource
+    kinds: Tuple[str, ...] = (ResourcePool.CPU, ResourcePool.KVS)
+    window: int = 64               # completed-instance latencies kept for
+                                   # the rolling p95
+
+
+@dataclass
+class AutoscaleAction:
+    t: float
+    resource: str
+    old_capacity: int
+    new_capacity: int
+    reason: str                    # "queue" | "p95" | "idle"
+
+
+@dataclass
+class AutoscaleReport:
+    actions: List[AutoscaleAction] = field(default_factory=list)
+    final_capacities: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def scale_ups(self) -> int:
+        return sum(1 for a in self.actions
+                   if a.new_capacity > a.old_capacity)
+
+    @property
+    def scale_downs(self) -> int:
+        return sum(1 for a in self.actions
+                   if a.new_capacity < a.old_capacity)
+
+
+class Autoscaler:
+    """Periodic capacity controller over one engine's ``ResourcePool``."""
+
+    def __init__(self, kernel: SimKernel, pool: ResourcePool,
+                 policy: Optional[AutoscalePolicy] = None):
+        self.kernel = kernel
+        self.pool = pool
+        self.policy = policy or AutoscalePolicy()
+        self.actions: List[AutoscaleAction] = []
+        self._latencies: deque = deque(maxlen=self.policy.window)
+        self._calm: Dict[str, int] = {}     # resource name -> calm streak
+
+    # -- wiring ----------------------------------------------------------
+    def start(self) -> "Autoscaler":
+        self.kernel.spawn(self._control_proc(), label="autoscaler",
+                          daemon=True)
+        return self
+
+    def observe_latency(self, latency_s: float) -> None:
+        """Feed one completed-instance latency into the rolling window."""
+        self._latencies.append(latency_s)
+
+    def rolling_p95(self) -> float:
+        return percentile(list(self._latencies), 95)
+
+    # -- control loop ----------------------------------------------------
+    def _control_proc(self):
+        p = self.policy
+        while True:
+            yield p.interval_s
+            self._tick()
+
+    def _tick(self) -> None:
+        p = self.policy
+        now = self.kernel.now
+        p95_breach = (p.p95_slo_s is not None and len(self._latencies) > 0
+                      and self.rolling_p95() > p.p95_slo_s)
+        for kind in p.kinds:
+            for res in self.pool.resources(kind):
+                self._decide(res, now, p95_breach)
+
+    def _decide(self, res: SlotResource, now: float,
+                p95_breach: bool) -> None:
+        p = self.policy
+        waiting = res.queue_len(now)
+        busy = res.in_service(now)
+        cap = res.capacity
+        floor = max(p.min_capacity, res.initial_capacity)
+        if waiting > p.queue_high * cap or (p95_breach and waiting > 0):
+            if cap < p.max_capacity:
+                new_cap = min(p.max_capacity, cap * 2)
+                reason = "p95" if (p95_breach and
+                                   waiting <= p.queue_high * cap) \
+                    else "queue"
+                self._resize(res, new_cap, now, reason)
+            self._calm[res.name] = 0
+            return
+        if waiting == 0 and busy * 2 <= cap:
+            streak = self._calm.get(res.name, 0) + 1
+            self._calm[res.name] = streak
+            if streak >= p.scale_down_after and cap > floor:
+                new_cap = max(floor,
+                              cap - max(1, int(cap * p.shrink_frac)))
+                self._resize(res, new_cap, now, "idle")
+                self._calm[res.name] = 0
+            return
+        self._calm[res.name] = 0
+
+    def _resize(self, res: SlotResource, new_cap: int, now: float,
+                reason: str) -> None:
+        old = res.capacity
+        if new_cap == old:
+            return
+        woken = res.set_capacity(new_cap, now)
+        for proc, label in woken:
+            self.kernel.log(f"grant:{label}@{res.name}")
+            self.kernel.wake(proc, label)
+        self.kernel.log(
+            f"autoscale:{res.name}:{old}->{res.capacity}:{reason}")
+        self.actions.append(AutoscaleAction(now, res.name, old,
+                                            res.capacity, reason))
+
+    # -- results ---------------------------------------------------------
+    def report(self) -> AutoscaleReport:
+        caps: Dict[str, int] = {}
+        for kind in self.policy.kinds:     # managed kinds only
+            caps.update(self.pool.capacities(kind))
+        return AutoscaleReport(actions=list(self.actions),
+                               final_capacities=caps)

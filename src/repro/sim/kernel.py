@@ -14,6 +14,12 @@ what turns N workflow instances into genuinely *concurrent* executions — a
 process that sleeps through a storage transfer observes every queue
 mutation other processes made in the meantime.
 
+*Daemon* processes (``spawn(..., daemon=True)``) are periodic control
+loops — e.g. the SLO-aware autoscaler — that must not keep the simulation
+alive: ``run()`` returns as soon as only daemon events remain in the heap.
+A daemon must not block on resources (it would be re-queued as a regular
+process and pin the loop open).
+
 Determinism rules (guarded, not assumed):
 
 * No wall clock.  The kernel never reads ``time.*``; simulated time only
@@ -37,18 +43,24 @@ class SimKernel:
 
     def __init__(self, start: float = 0.0, record_trace: bool = False):
         self.now = float(start)
-        self._heap: list = []          # (time, seq, kind, payload)
+        self._heap: list = []          # (time, seq, kind, payload, label,
+                                       #  daemon)
         self._seq = 0
+        self._live = 0                 # non-daemon events in the heap
         self.events_processed = 0
         self.trace: Optional[Trace] = [] if record_trace else None
 
     # -- scheduling ------------------------------------------------------
-    def _push(self, t: float, kind: str, payload, label: str):
+    def _push(self, t: float, kind: str, payload, label: str,
+              daemon: bool = False):
         if t < self.now - 1e-12:
             raise ValueError(
                 f"event scheduled in the past: t={t} < now={self.now}")
         self._seq += 1
-        heapq.heappush(self._heap, (t, self._seq, kind, payload, label))
+        heapq.heappush(self._heap, (t, self._seq, kind, payload, label,
+                                    daemon))
+        if not daemon:
+            self._live += 1
         if self.trace is not None:
             self.trace.append((t, self._seq, f"schedule:{label}"))
 
@@ -63,11 +75,17 @@ class SimKernel:
         self.call_at(self.now + delay, fn, label)
 
     def spawn(self, proc: Generator, label: str = "proc",
-              at: Optional[float] = None) -> None:
+              at: Optional[float] = None, daemon: bool = False) -> None:
         """Register a process generator; it first runs at ``at`` (default:
-        now).  The generator yields non-negative delays in seconds."""
+        now).  The generator yields non-negative delays in seconds.
+        ``daemon`` processes never keep ``run()`` alive on their own."""
         t = self.now if at is None else at
-        self._push(t, "proc", proc, label)
+        self._push(t, "proc", proc, label, daemon=daemon)
+
+    def wake(self, proc: Generator, label: str = "proc") -> None:
+        """Re-schedule a process that was parked outside the heap (a
+        resource waiter admitted by a capacity grow) at the current time."""
+        self._push(self.now, "proc", proc, label)
 
     def log(self, label: str) -> None:
         """Record a named point-event in the trace at the current time."""
@@ -76,18 +94,24 @@ class SimKernel:
             self.trace.append((self.now, self._seq, label))
 
     # -- driving ---------------------------------------------------------
-    def _step_proc(self, proc: Generator, label: str):
+    def _step_proc(self, proc: Generator, label: str, daemon: bool = False):
         try:
             item = next(proc)
         except StopIteration:
             return
         if isinstance(item, tuple):
             op, res = item
+            if daemon:
+                # a parked daemon would be re-pushed as a live process on
+                # wake and pin run() open forever — fail loudly instead
+                raise ValueError(
+                    f"daemon process {label!r} must not block on "
+                    f"resources (yielded {op!r})")
             if op == "acquire":
                 if res.hold(self.now):
                     if self.trace is not None:
                         self.log(f"grant:{label}@{res.name}")
-                    self._push(self.now, "proc", proc, label)
+                    self._push(self.now, "proc", proc, label, daemon=daemon)
                 else:
                     res.enqueue_waiter(proc, label, self.now)
                     if self.trace is not None:
@@ -102,7 +126,7 @@ class SimKernel:
                     if self.trace is not None:
                         self.log(f"grant:{wlabel}@{res.name}")
                     self._push(self.now, "proc", wproc, wlabel)
-                self._push(self.now, "proc", proc, label)
+                self._push(self.now, "proc", proc, label, daemon=daemon)
                 return
             raise ValueError(f"process {label!r} yielded unknown op "
                              f"{op!r}")
@@ -110,23 +134,25 @@ class SimKernel:
         if delay < 0.0:
             raise ValueError(f"process {label!r} yielded negative delay "
                              f"{delay}")
-        self._push(self.now + delay, "proc", proc, label)
+        self._push(self.now + delay, "proc", proc, label, daemon=daemon)
 
     def run(self, until: Optional[float] = None) -> float:
-        """Pop events in (time, seq) order until the heap drains (or
-        simulated time passes ``until``).  Returns the final clock."""
-        while self._heap:
-            t, seq, kind, payload, label = self._heap[0]
+        """Pop events in (time, seq) order until only daemon events remain
+        (or simulated time passes ``until``).  Returns the final clock."""
+        while self._heap and self._live > 0:
+            t, seq, kind, payload, label, daemon = self._heap[0]
             if until is not None and t > until:
                 break
             heapq.heappop(self._heap)
+            if not daemon:
+                self._live -= 1
             assert t >= self.now - 1e-12, "event heap went backwards"
             self.now = max(self.now, t)
             self.events_processed += 1
             if self.trace is not None:
                 self.trace.append((self.now, seq, f"fire:{label}"))
             if kind == "proc":
-                self._step_proc(payload, label)
+                self._step_proc(payload, label, daemon)
             else:
                 payload()
         return self.now

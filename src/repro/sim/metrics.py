@@ -40,6 +40,8 @@ class ParallelReport:
     cpu_queues: Dict[str, Dict[str, float]] = field(default_factory=dict)
     events_processed: int = 0
     trace: Optional[list] = None
+    # AutoscaleReport when the run had an autoscaler attached, else None
+    autoscale: Optional[object] = None
 
     @property
     def latencies(self) -> List[float]:
@@ -55,7 +57,8 @@ class ParallelReport:
 
     @classmethod
     def build(cls, instances, start_times, end_times, pool=None,
-              events_processed: int = 0, trace=None) -> "ParallelReport":
+              events_processed: int = 0, trace=None,
+              autoscale=None) -> "ParallelReport":
         lats = [m.latency for m in instances]
         t0 = min(start_times) if start_times else 0.0
         t1 = max(end_times) if end_times else 0.0
@@ -73,6 +76,7 @@ class ParallelReport:
             cpu_queues=pool.queue_stats(pool.CPU) if pool else {},
             events_processed=events_processed,
             trace=trace,
+            autoscale=autoscale,
         )
 
     # list-compat -------------------------------------------------------

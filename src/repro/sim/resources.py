@@ -25,11 +25,26 @@ from typing import Callable, Dict, Optional, Tuple
 
 
 class SlotResource:
-    """Deterministic FIFO queue with ``capacity`` parallel servers."""
+    """Deterministic FIFO queue with ``capacity`` parallel servers.
+
+    Capacity is *dynamic* (``set_capacity``): the SLO-aware autoscaler
+    grows pools under queue pressure (newly added servers admit parked
+    held-slot waiters immediately) and shrinks them by draining — a
+    retiring server finishes its in-flight job and simply takes no new
+    work; nothing is ever preempted.
+
+    FIFO is *per assignment time*: an analytic ``request`` commits its
+    start slot at enqueue (the caller immediately sleeps the returned
+    wait), so a later capacity grow serves subsequently *arriving* jobs on
+    the new servers but cannot re-schedule already-committed ones — the
+    same way work already dispatched to a server finishes where it was
+    sent.  Held-slot waiters, by contrast, are still parked and do get
+    admitted by a grow."""
 
     def __init__(self, name: str, capacity: int = 1):
         self.name = name
         self.capacity = max(1, int(capacity))
+        self.initial_capacity = self.capacity
         self._free_at = [0.0] * self.capacity   # analytic-job slot frees
         heapq.heapify(self._free_at)
         self._in_system: list = []              # ends of analytic jobs
@@ -55,6 +70,17 @@ class SlotResource:
         """Jobs queued or in service at time ``t``."""
         self._observe(t)
         return len(self._in_system) + self._held + len(self._wait_q)
+
+    def queue_len(self, t: float) -> int:
+        """Jobs *waiting* (not yet in service) at time ``t`` — the
+        autoscaler's primary pressure signal."""
+        self._observe(t)
+        return len(self._waiting) + len(self._wait_q)
+
+    def in_service(self, t: float) -> int:
+        """Jobs currently occupying a server at time ``t``."""
+        self._observe(t)
+        return (len(self._in_system) - len(self._waiting)) + self._held
 
     def request(self, t: float, service_s: float) -> float:
         """FIFO-enqueue a job of ``service_s``; returns the queueing wait.
@@ -92,19 +118,51 @@ class SlotResource:
         self.max_in_system = max(self.max_in_system,
                                  self._held + len(self._wait_q))
 
+    def _admit_waiter(self, t: float):
+        """Move the head waiter into a held slot, accounting its wait."""
+        proc, label, t_enq = self._wait_q.popleft()
+        self._held += 1
+        self.n_requests += 1
+        self.total_wait += t - t_enq
+        return proc, label
+
     def unhold(self, t: float):
         """Release a held slot at ``t``; returns the woken head waiter as
-        (proc, label) — the slot transfers to it — or None."""
+        (proc, label) — the slot transfers to it — or None.  After a
+        capacity shrink the freed slot may itself be retiring
+        (``_held > capacity``): it then drains instead of re-granting."""
         if self._held <= 0:
             raise RuntimeError(f"release without acquire on {self.name}")
         self.last_busy_t = max(self.last_busy_t, t)
-        if self._wait_q:
-            proc, label, t_enq = self._wait_q.popleft()
-            self.n_requests += 1
-            self.total_wait += t - t_enq
-            return proc, label
         self._held -= 1
+        if self._wait_q and self._held < self.capacity:
+            return self._admit_waiter(t)
         return None
+
+    # -- dynamic capacity (autoscaler) -----------------------------------
+    def set_capacity(self, new_capacity: int, t: float):
+        """Resize to ``new_capacity`` servers at time ``t``.
+
+        Grow: the added servers come up free at ``t`` and parked held-slot
+        waiters are admitted immediately — returned as ``[(proc, label),
+        ...]`` for the caller to ``SimKernel.wake()``.  Shrink: drain-only —
+        the idlest servers retire first and anything in flight (analytic
+        backlog or held slots) runs to completion; excess held slots fall
+        away one release at a time via ``unhold``."""
+        new_cap = max(1, int(new_capacity))
+        woken = []
+        if new_cap > self.capacity:
+            for _ in range(new_cap - self.capacity):
+                heapq.heappush(self._free_at, t)
+            self.capacity = new_cap
+            while self._wait_q and self._held < self.capacity:
+                woken.append(self._admit_waiter(t))
+        elif new_cap < self.capacity:
+            entries = sorted(self._free_at)
+            self._free_at = entries[self.capacity - new_cap:]
+            heapq.heapify(self._free_at)
+            self.capacity = new_cap
+        return woken
 
     # -- planner view ----------------------------------------------------
     def next_free(self) -> float:
@@ -169,6 +227,15 @@ class ResourcePool:
 
     def busy_view(self, kind: str = CPU) -> _BusyView:
         return _BusyView(self, kind)
+
+    def resources(self, kind: Optional[str] = None):
+        """All live resources (of one kind), in deterministic key order —
+        the autoscaler's scan set."""
+        return [res for (k, node), res in sorted(self._res.items())
+                if kind is None or k == kind]
+
+    def capacities(self, kind: Optional[str] = None) -> Dict[str, int]:
+        return {res.name: res.capacity for res in self.resources(kind)}
 
     def queue_stats(self, kind: str = KVS) -> Dict[str, Dict[str, float]]:
         return {node: res.stats() for (k, node), res in sorted(

@@ -1,0 +1,234 @@
+"""SLO-aware autoscaler: control rules, drain semantics, determinism.
+
+Covers the four contract points of ``repro.sim.autoscale``: scale-up under
+sustained queue growth (waiters admitted immediately), scale-down
+hysteresis (no thrash on oscillating load), shrink-by-draining (in-flight
+work never preempted), and deterministic replay of full engine runs with
+the controller enabled.
+"""
+import pytest
+
+from repro.sim.autoscale import AutoscalePolicy, Autoscaler
+from repro.sim.kernel import SimKernel
+from repro.sim.resources import ResourcePool, SlotResource
+from repro.sim.workload import ClosedLoop
+
+
+# ---------------------------------------------------------------------------
+# SlotResource dynamic capacity (unit level)
+# ---------------------------------------------------------------------------
+def test_grow_adds_idle_servers_for_analytic_jobs():
+    q = SlotResource("kvs:n", capacity=1)
+    assert q.request(0.0, 10.0) == 0.0
+    assert q.set_capacity(3, 1.0) == []      # no parked waiters to wake
+    assert q.capacity == 3
+    # the two new servers are free at t=1: no queueing behind the old one
+    assert q.request(1.0, 1.0) == 0.0
+    assert q.request(1.0, 1.0) == 0.0
+    # third job queues behind the earliest-free NEW server (t=2), not the
+    # old server that stays busy until t=10
+    assert q.request(1.0, 1.0) == 1.0
+
+def test_shrink_retires_idle_servers_first():
+    q = SlotResource("kvs:n", capacity=3)
+    q.request(0.0, 10.0)                     # one busy server until t=10
+    q.set_capacity(1, 1.0)
+    assert q.capacity == 1
+    # the surviving server is the busy one: its backlog drains, new work
+    # queues behind it instead of landing on a retired idle server
+    assert q.request(1.0, 1.0) == 9.0
+
+def test_grow_admits_parked_waiters_immediately():
+    kernel = SimKernel()
+    pool = ResourcePool(cpu_capacity=lambda n: 1)
+    cpu = pool.cpu("n0")
+    spans = {}
+
+    def proc(name, hold_s):
+        yield ("acquire", cpu)
+        start = kernel.now
+        yield hold_s
+        yield ("release", cpu)
+        spans[name] = (start, kernel.now)
+
+    kernel.spawn(proc("a", 5.0), label="a")
+    kernel.spawn(proc("b", 5.0), label="b")
+    kernel.spawn(proc("c", 5.0), label="c")
+
+    def grow():
+        yield 1.0
+        for p, label in cpu.set_capacity(3, kernel.now):
+            kernel.wake(p, label)
+
+    kernel.spawn(grow(), label="grow")
+    kernel.run()
+    assert spans["a"] == (0.0, 5.0)
+    # b and c were parked; the grow at t=1 admits both at that instant
+    assert spans["b"] == (1.0, 6.0)
+    assert spans["c"] == (1.0, 6.0)
+
+
+def test_shrink_never_preempts_held_slots():
+    kernel = SimKernel()
+    pool = ResourcePool(cpu_capacity=lambda n: 4)
+    cpu = pool.cpu("n0")
+    spans = {}
+
+    def proc(name, hold_s):
+        yield ("acquire", cpu)
+        start = kernel.now
+        yield hold_s
+        yield ("release", cpu)
+        spans[name] = (start, kernel.now)
+
+    for i, hold in enumerate([1.0, 2.0, 3.0, 4.0]):
+        kernel.spawn(proc(f"h{i}", hold), label=f"h{i}")
+    kernel.spawn(proc("w", 1.0), label="w")       # 5th: parked waiter
+    kernel.call_later(0.5, lambda: cpu.set_capacity(1, kernel.now),
+                      label="shrink")
+    kernel.run()
+    # every in-flight holder ran its full span untouched by the shrink
+    for i, hold in enumerate([1.0, 2.0, 3.0, 4.0]):
+        assert spans[f"h{i}"] == (0.0, hold)
+    # the waiter is admitted only once held slots drained below the new
+    # capacity: after the 4th release at t=4
+    assert spans["w"] == (4.0, 5.0)
+    assert cpu.capacity == 1
+
+
+# ---------------------------------------------------------------------------
+# control loop (Autoscaler on a kernel)
+# ---------------------------------------------------------------------------
+def _holder(kernel, res, hold_s):
+    yield ("acquire", res)
+    yield hold_s
+    yield ("release", res)
+
+
+def test_scale_up_under_sustained_queue_growth():
+    kernel = SimKernel()
+    pool = ResourcePool(cpu_capacity=lambda n: 1)
+    cpu = pool.cpu("n0")
+    policy = AutoscalePolicy(interval_s=0.25, queue_high=1.0,
+                             max_capacity=16, kinds=(ResourcePool.CPU,))
+    scaler = Autoscaler(kernel, pool, policy).start()
+    for i in range(12):
+        kernel.spawn(_holder(kernel, cpu, 1.0), label=f"p{i}")
+    kernel.run()
+    # scale-up-fast: capacity doubled repeatedly under the backlog
+    assert cpu.capacity > 1
+    assert scaler.report().scale_ups >= 2
+    # far faster than the 12 s a fixed single slot would need
+    assert kernel.now < 6.0
+
+
+def test_daemon_control_loop_does_not_keep_kernel_alive():
+    kernel = SimKernel()
+    pool = ResourcePool()
+    Autoscaler(kernel, pool, AutoscalePolicy(interval_s=0.5)).start()
+    kernel.spawn(iter([]), label="only-work")
+    kernel.run()
+    assert kernel.now == 0.0          # returned as soon as work drained
+
+
+def test_scale_down_hysteresis_no_thrash():
+    kernel = SimKernel()
+    pool = ResourcePool(cpu_capacity=lambda n: 2)
+    cpu = pool.cpu("n0")
+    policy = AutoscalePolicy(interval_s=0.5, queue_high=1.0,
+                             scale_down_after=4, max_capacity=16,
+                             kinds=(ResourcePool.CPU,))
+    scaler = Autoscaler(kernel, pool, policy).start()
+    # phase 1 — burst: 10 concurrent holders force scale-ups
+    for i in range(10):
+        kernel.spawn(_holder(kernel, cpu, 1.0), label=f"b{i}")
+
+    # phase 2 — oscillating load from t=2..8: bursts every 1 s keep more
+    # than half the servers busy, resetting the calm streak before the
+    # 4-interval hysteresis (2 s) can expire
+    def oscillate():
+        yield 2.0
+        for _ in range(6):
+            for i in range(3):
+                kernel.spawn(_holder(kernel, cpu, 0.8), label="osc")
+            yield 1.0
+
+    kernel.spawn(oscillate(), label="osc-driver")
+    # phase 3 — sentinel keeps the sim alive while load is gone
+    kernel.spawn(iter([14.0]), label="sentinel")
+    kernel.run()
+
+    grown = max(a.new_capacity for a in scaler.actions)
+    assert grown > 2
+    downs_during_oscillation = [a for a in scaler.actions
+                                if a.new_capacity < a.old_capacity
+                                and a.t < 8.0]
+    assert downs_during_oscillation == []          # hysteresis held
+    downs_after = [a for a in scaler.actions
+                   if a.new_capacity < a.old_capacity and a.t >= 8.0]
+    assert len(downs_after) >= 1                   # idle drain kicked in
+    assert cpu.capacity < grown
+    assert cpu.capacity >= 2                       # never below initial
+
+
+def test_shrink_floor_is_initial_capacity():
+    kernel = SimKernel()
+    pool = ResourcePool(cpu_capacity=lambda n: 4)
+    cpu = pool.cpu("n0")
+    policy = AutoscalePolicy(interval_s=0.5, scale_down_after=1,
+                             kinds=(ResourcePool.CPU,))
+    scaler = Autoscaler(kernel, pool, policy).start()
+    kernel.spawn(iter([10.0]), label="sentinel")
+    kernel.run()
+    assert cpu.capacity == 4                       # idle but floored
+    assert scaler.report().scale_downs == 0
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def net_maker():
+    from repro.continuum.network import ContinuumNetwork
+    from repro.continuum.orbits import Constellation
+
+    def make():
+        return ContinuumNetwork(Constellation(n_planes=6, sats_per_plane=6))
+    return make
+
+
+def _closed_loop_run(net_maker, autoscale=None, n=48, clients=24,
+                     record_trace=False):
+    from repro.serverless.engine import WorkflowEngine
+    from repro.serverless.workflow import flood_workflow
+    eng = WorkflowEngine(net_maker(), strategy="stateless")
+    return eng.run_parallel(lambda wid: flood_workflow(wid), n, 2e6,
+                            workload=ClosedLoop(clients=clients),
+                            record_trace=record_trace,
+                            autoscale=autoscale)
+
+
+def test_autoscaled_stateless_beats_fixed_capacity(net_maker):
+    fixed = _closed_loop_run(net_maker)
+    auto = _closed_loop_run(net_maker,
+                            autoscale=AutoscalePolicy(p95_slo_s=10.0))
+    assert auto.throughput_rps > fixed.throughput_rps
+    assert auto.p95 < fixed.p95
+    assert auto.autoscale is not None
+    assert auto.autoscale.scale_ups >= 1
+    assert fixed.autoscale is None
+
+
+def test_deterministic_replay_with_autoscaler(net_maker):
+    pol = AutoscalePolicy(p95_slo_s=10.0)
+    a = _closed_loop_run(net_maker, autoscale=pol, record_trace=True)
+    b = _closed_loop_run(net_maker, autoscale=pol, record_trace=True)
+    assert a.trace == b.trace and len(a.trace) > 0
+    assert any(":autoscale:" in e[2] or e[2].startswith("autoscale:")
+               for e in a.trace)
+    assert a.latencies == b.latencies
+    assert a.kvs_queues == b.kvs_queues
+    assert [(x.t, x.resource, x.old_capacity, x.new_capacity, x.reason)
+            for x in a.autoscale.actions] == \
+        [(x.t, x.resource, x.old_capacity, x.new_capacity, x.reason)
+         for x in b.autoscale.actions]

@@ -10,6 +10,7 @@ from repro.core.slo import SLO, FunctionDemand
 from repro.core.topology import Node, TopologyGraph
 from repro.distributed.layouts import (choose_layout, opt_pspecs,
                                        param_pspecs)
+from repro.launch.mesh import make_mesh
 
 
 def star_graph(n_leaves=6, lat=0.005):
@@ -40,6 +41,25 @@ def test_vicinity_ordered_and_bounded():
     assert vs[0] == "hub"
     assert "leaf0" in vs and "leaf1" in vs
     assert "leaf5" not in vs          # 0.030 > radius
+
+
+def test_vicinity_matches_uncached_reference():
+    """The SSSP-cache-backed vicinity must stay path-identical to the
+    exact uncached Dijkstra ball on the real constellation topology."""
+    from repro.continuum.network import ContinuumNetwork
+    from repro.continuum.orbits import Constellation
+    from repro.core.planner import vicinity_uncached
+    g = ContinuumNetwork(Constellation(6, 6)).graph_at(0.0)
+    centers = sorted(g.nodes)[::5]
+    assert centers
+    for center in centers:
+        for radius in (0.01, 0.05, 0.2):
+            assert vicinity(g, center, radius) == \
+                vicinity_uncached(g, center, radius), (center, radius)
+    # limit pruning keeps the nearest candidates in both implementations
+    c = centers[0]
+    assert vicinity(g, c, 0.2, limit=8) == vicinity_uncached(g, c, 0.2,
+                                                             limit=8)
 
 
 def test_plan_prefers_locality():
@@ -79,8 +99,7 @@ def test_plan_slo_filters_candidates():
 # ---------------------------------------------------------------------------
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_param_pspecs_families(mesh):

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.mesh import make_mesh
 from repro.roofline.hlo import collective_stats, total_collective_bytes
 
 HLO_SNIPPET = """
@@ -35,8 +36,7 @@ def test_collective_parser():
 
 
 def test_parser_on_real_compiled_module():
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("d",))
 
     def f(x):
         return x @ x.T
@@ -63,8 +63,7 @@ def test_serving_engine_completes():
 def test_mesh_planner_bridge():
     from repro.core.planner import (LayoutCandidate, mesh_topology,
                                     plan_mesh_layout, score_layout)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
 
     class FakeMesh:
         shape = {"pod": 2, "data": 16, "model": 16}
