@@ -5,12 +5,19 @@ Bandwidths follow the paper (§2.1): ISL ~100 Gb/s; satellite-ground
 TopologyGraph snapshot the Databelt Identify phase consumes; ``available``
 implements R-5 (a satellite is available when it can reach the required
 node types).
+
+Multi-region (``repro.continuum.regions``): sites may carry a ``region``
+id.  Region-tagged edge/drone/ground sites get metro-latency links only to
+their *own* region's cloud, and the clouds interconnect over a terrestrial
+WAN backbone with great-circle latencies — untagged sites keep the legacy
+all-clouds wiring, so single-region topologies are byte-identical to the
+pre-region builder.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set, Tuple
 
 from repro.continuum.orbits import (Constellation, GroundSite,
                                     line_of_sight, propagation_latency,
@@ -22,6 +29,7 @@ ISL_BW = 100e9 / 8          # bytes/s (100 Gb/s)
 GROUND_BW = 300e6 / 8       # bytes/s (300 Mb/s)
 TERRA_BW = 1e9 / 8          # bytes/s
 EO_BW = 100e9 / 8
+METRO_LATENCY = 0.020       # seconds — site <-> its region's cloud
 
 
 @dataclass
@@ -31,22 +39,34 @@ class SiteSpec:
     site: GroundSite
     cpu: float = 4.0
     mem: float = 8e9
+    region: Optional[str] = None   # region id (multi-region continuum)
 
 
 class ContinuumNetwork:
-    """Cloud + edge + drones + EO + a Walker LEO shell."""
+    """Cloud + edge + drones + EO + one or more Walker LEO shells.
+
+    ``constellation`` may be a single ``Constellation`` or a
+    ``repro.continuum.regions.MultiConstellation`` — only the
+    ``sat_id``/``position``/``isl_neighbors`` interface is consumed.
+
+    ``require_kinds`` (optional) tightens R-5 availability: a satellite
+    then counts as available only when its snapshot component actually
+    reaches a node of one of the given kinds (see ``available``)."""
 
     def __init__(self, constellation: Optional[Constellation] = None,
                  sites: Optional[List[SiteSpec]] = None,
                  sat_cpu: float = 4.0, sat_mem: float = 8e9,
-                 cache_quantum: float = 1.0):
+                 cache_quantum: float = 1.0,
+                 require_kinds: Optional[Tuple[str, ...]] = None):
         self.constellation = constellation or Constellation()
         if sites is None:
             sites = default_sites()
         self.sites = sites
         self.sat_cpu, self.sat_mem = sat_cpu, sat_mem
         self.cache_quantum = cache_quantum
+        self.require_kinds = require_kinds
         self._cache: Dict[float, TopologyGraph] = {}
+        self._reach_cache: Dict[float, Set[str]] = {}
         # persistent node objects so resource accounting survives snapshots
         self._nodes: Dict[str, Node] = {}
         self._make_nodes()
@@ -62,7 +82,8 @@ class ContinuumNetwork:
         for s in self.sites:
             self._nodes[s.id] = Node(
                 s.id, s.kind, cpu=s.cpu, mem=s.mem,
-                position=(lambda t, _s=s.site: _s.position(t)))
+                position=(lambda t, _s=s.site: _s.position(t)),
+                region=s.region)
 
     @property
     def node_ids(self) -> List[str]:
@@ -111,12 +132,24 @@ class ContinuumNetwork:
                     g.add_link(s.id, sid,
                                propagation_latency(pos[s.id], pos[sid]),
                                EO_BW)
-        # terrestrial backbone: edges/drones/ground <-> cloud
+        # terrestrial backbone: edges/drones/ground <-> their cloud.
+        # Region-tagged sites connect only to their own region's cloud at
+        # metro latency; untagged sites keep the legacy all-clouds wiring.
         clouds = [s for s in self.sites if s.kind == CLOUD]
         for s in self.sites:
             if s.kind in (EDGE, DRONE, GROUND):
                 for cl in clouds:
-                    g.add_link(s.id, cl.id, 0.020, TERRA_BW)
+                    if s.region is None or cl.region is None \
+                            or s.region == cl.region:
+                        g.add_link(s.id, cl.id, METRO_LATENCY, TERRA_BW)
+        # inter-region WAN backbone: clouds pairwise over stretched
+        # great-circle fiber (repro.continuum.regions.wan_latency)
+        if len(clouds) > 1:
+            from repro.continuum.regions import WAN_BW, wan_latency
+            for i, a in enumerate(clouds):
+                for b in clouds[i + 1:]:
+                    g.add_link(a.id, b.id, wan_latency(a.site, b.site),
+                               WAN_BW)
         if len(self._cache) > 256:
             self._cache.clear()
         self._cache[key] = g
@@ -124,15 +157,50 @@ class ContinuumNetwork:
 
     # ------------------------------------------------------------------
     def available(self, nid: str, t: float) -> bool:
-        """R-5: ground/cloud/edge always; satellites when connected (degree
-        > 0 toward the required types via the snapshot graph)."""
+        """R-5 availability: ground/cloud/edge nodes always; satellites
+        when connected in the snapshot graph.
+
+        By default "connected" is any-neighbor degree > 0 — a satellite
+        with only ISL links still counts, even when its component never
+        touches the ground segment.  Constructing the network with
+        ``require_kinds=(CLOUD, EDGE, GROUND)`` (or any kind tuple)
+        tightens this to the paper's stronger reading: the satellite must
+        *reach* a node of a required kind through the snapshot, computed
+        by one multi-source BFS per snapshot and cached alongside it."""
         node = self._nodes.get(nid)
         if node is None:
             return False
         if node.kind != SAT:
             return True
         g = self.graph_at(t)
-        return len(g.neighbors(nid)) > 0
+        if self.require_kinds is None:
+            return len(g.neighbors(nid)) > 0
+        return nid in self._reachable(t)
+
+    def _reachable(self, t: float) -> Set[str]:
+        """Nodes with a snapshot path to at least one ``require_kinds``
+        node: multi-source BFS from every required-kind node, memoized per
+        snapshot quantum (same keying as the graph cache)."""
+        key = round(t / self.cache_quantum) * self.cache_quantum
+        hit = self._reach_cache.get(key)
+        if hit is not None:
+            return hit
+        g = self.graph_at(t)
+        frontier = [n.id for n in g.nodes.values()
+                    if n.kind in self.require_kinds]
+        seen = set(frontier)
+        while frontier:
+            nxt = []
+            for u in frontier:
+                for v in g.neighbors(u):
+                    if v not in seen:
+                        seen.add(v)
+                        nxt.append(v)
+            frontier = nxt
+        if len(self._reach_cache) > 256:
+            self._reach_cache.clear()
+        self._reach_cache[key] = seen
+        return seen
 
 
 def default_sites() -> List[SiteSpec]:

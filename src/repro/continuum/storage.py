@@ -1,24 +1,42 @@
-"""Two-tier storage (paper §3.2): per-node local KVS + global cloud KVS.
+"""Two-tier storage (paper §3.2): per-node local KVS + sharded global KVS.
 
 Reads resolve through the Databelt State Key: local hit (same node) costs
 only the KVS op; otherwise the value streams over the lowest-latency path.
 The global tier provides redundancy — every write also (asynchronously)
-lands in the cloud KVS, so a vanished local copy falls back there.
+lands in the global KVS, so a vanished local copy falls back there.
+
+The global tier is **region-sharded** (``repro.continuum.regions.
+GlobalTier``): each encoded key has a *home* region chosen by rendezvous
+hashing over the cloud nodes, writers replicate to the region nearest to
+them, and reads probe the home shard first before falling back
+cross-region.  With a single cloud every key's home is that cloud and the
+data path is identical to the original single-``cloud0`` design — the
+per-region shards only start spreading load when the topology actually has
+several regions.
 
 Queueing happens on first-class simulation resources: each node's KVS is a
 capacity-1 ``SlotResource`` FIFO owned by a ``ResourcePool`` (shared with
 the workflow engine's CPU slots), so Databelt / random / stateless contend
-on the same queues under parallel load.  When a ``SimKernel`` is attached
-as ``scheduler``, the async global-replication leg becomes a real deferred
-event that hits the cloud KVS queue at its arrival time instead of being
-charged inline.
+on the same queues under parallel load.  Two queueing styles:
+
+* **analytic** (``put``/``get``/``get_fused``) — the op calls
+  ``SlotResource.request`` which commits its start slot at enqueue; used
+  by the sequential path and the default engine mode.  When a
+  ``SimKernel`` is attached as ``scheduler``, the async global-replication
+  leg becomes a real deferred event.
+* **event-driven** (``put_ev``/``get_ev``/``get_fused_ev``) — generator
+  variants that park on the KVS queue as held-slot waiters, exactly like
+  CPU slots.  A capacity grow (``SlotResource.set_capacity``) re-admits
+  the queued backlog instantly, which is what lets the autoscaler help
+  *already-queued* KVS ops (ROADMAP: event-driven KVS requests).
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.continuum.regions import GlobalTier
 from repro.core.keys import StateKey
 from repro.core.topology import CLOUD, TopologyGraph
 from repro.sim.resources import ResourcePool
@@ -26,6 +44,12 @@ from repro.sim.resources import ResourcePool
 KVS_OP_LATENCY = 0.0008     # per-request local KVS overhead (seconds)
 KVS_READ_BW = 40e6          # bytes/s — Pi-class KVS read + deserialization
 KVS_WRITE_BW = 30e6         # bytes/s — Pi-class KVS write + serialization
+
+# Worst-case detour charged when the global tier must serve a reader that
+# is totally partitioned from every replica: the read completes (the system
+# keeps running) at the cost of a store-and-forward relay epoch.
+PARTITION_DETOUR_LATENCY_S = 1.0
+PARTITION_DETOUR_HOPS = 8
 
 
 @dataclass
@@ -49,11 +73,14 @@ class TwoTierStorage:
                  resources: Optional[ResourcePool] = None):
         self.graph_fn = graph_fn
         self.local: Dict[str, Dict[str, StoredState]] = {}
-        self.global_store: Dict[str, StoredState] = {}
+        # region-sharded global tier: one shard per cloud region, homes by
+        # rendezvous hashing — the single-region degenerate case behaves
+        # exactly like the old one-dict global store
+        self.global_tier = GlobalTier()
         # per-node KVS service queues: requests serialize on the holder —
-        # under parallel workflows the single cloud KVS becomes the
-        # bottleneck for Stateless, while Databelt spreads load over
-        # satellite-local stores (paper Table 3 / Fig 13)
+        # under parallel workflows the cloud KVS becomes the bottleneck
+        # for Stateless (per *region* once sharded), while Databelt
+        # spreads load over satellite-local stores (paper Table 3 / Fig 13)
         self.resources = resources or ResourcePool()
         # an attached SimKernel turns async replication into deferred
         # events; None falls back to inline accounting (sequential mode)
@@ -63,9 +90,45 @@ class TwoTierStorage:
         """FIFO queueing at the node's KVS; returns total (wait+service)."""
         return self.resources.kvs(node).request(t, service_s) + service_s
 
-    def _cloud(self, graph: TopologyGraph) -> Optional[str]:
-        return next((n.id for n in graph.nodes.values()
-                     if n.kind == CLOUD), None)
+    @staticmethod
+    def _clouds(graph: TopologyGraph) -> List[str]:
+        return sorted(n.id for n in graph.nodes.values()
+                      if n.kind == CLOUD)
+
+    def _replicate_record(self, graph: TopologyGraph, src: str,
+                          key: StateKey, st: StoredState) -> Optional[str]:
+        """Register the global replica in its shard — the region *nearest*
+        to the writer (the cheap WAN leg) — and return that region's cloud
+        node, or None when the topology has no cloud."""
+        target = graph.nearest_of_kind(src, CLOUD)
+        self.global_tier.put(key.encoded(), st, target)
+        return target
+
+    def _global_locate(self, graph: TopologyGraph, enc: str, reader: str
+                       ) -> Tuple[Optional[StoredState], Optional[str]]:
+        """Resolve ``enc`` through the sharded global tier: the key's home
+        region first, then cross-region fallback to the replica nearest
+        the reader.  Returns ``(state, serving_cloud)``; ``serving_cloud``
+        is None when the value exists but no in-graph cloud holds it (the
+        unsharded legacy shard) — the caller then charges the holder."""
+        clouds = self._clouds(graph)
+        if clouds:
+            home = self.global_tier.home(enc, clouds)
+            if self.global_tier.has(enc, home):
+                return self.global_tier.get(enc, home), home
+            holders = self.global_tier.locate(enc)
+            if holders:
+                def rank(r: str):
+                    if r in graph.nodes:
+                        _, lat = graph.dijkstra(r, reader)
+                    else:
+                        lat = math.inf
+                    return (lat, r)
+                best = min(holders, key=rank)
+                return (self.global_tier.get(enc, best),
+                        best if best in graph.nodes else None)
+            return None, None
+        return self.global_tier.get_any(enc), None
 
     # ------------------------------------------------------------------
     def put(self, key: StateKey, size: float, payload=None, t: float = 0.0,
@@ -89,16 +152,15 @@ class TwoTierStorage:
         self.local.setdefault(dst, {})[key.encoded()] = st
         if not account:
             if replicate_global:
-                self.global_store[key.encoded()] = st
+                self._replicate_record(graph, src, key, st)
             return AccessResult(0.0, hops, src == dst)
         ser = self._service(dst, t, KVS_OP_LATENCY + size / KVS_WRITE_BW)
         total = ser + lat
         if replicate_global:
-            # redundancy write to the cloud KVS (paper: write times are
-            # nearly system-independent because every system pays this
-            # cloud-bound leg)
-            self.global_store[key.encoded()] = st
-            cloud = self._cloud(graph)
+            # redundancy write to the nearest region's cloud KVS (paper:
+            # write times are nearly system-independent because every
+            # system pays this cloud-bound leg)
+            cloud = self._replicate_record(graph, src, key, st)
             if cloud is not None and cloud != dst:
                 glat, _ = self._transfer(graph, src, cloud, size)
                 if math.isfinite(glat):
@@ -145,15 +207,17 @@ class TwoTierStorage:
                                     KVS_OP_LATENCY + st.size / KVS_READ_BW)
                 return st, AccessResult(ser + lat, hops,
                                         False, network_latency=lat)
-        # global tier fallback (holder missing or unreachable)
-        st = self.global_store.get(enc)
+        # global tier fallback (holder missing or unreachable): home
+        # shard first, then cross-region
+        st, serving = self._global_locate(graph, enc, reader_node)
         if st is not None:
-            cloud = self._cloud(graph) or holder
-            lat, hops = self._transfer(graph, cloud, reader_node, st.size)
+            src_node = serving or holder
+            lat, hops = self._transfer(graph, src_node, reader_node,
+                                       st.size)
             if not math.isfinite(lat):
                 # total partition: charge a worst-case detour, keep running
-                lat, hops = 1.0, 8
-            ser = self._service(cloud or holder, t,
+                lat, hops = PARTITION_DETOUR_LATENCY_S, PARTITION_DETOUR_HOPS
+            ser = self._service(src_node, t,
                                 KVS_OP_LATENCY + st.size / KVS_READ_BW)
             return st, AccessResult(ser + lat, hops, False,
                                     from_global=True, network_latency=lat)
@@ -176,13 +240,127 @@ class TwoTierStorage:
         for src, size in by_source.items():
             lat, hops = self._transfer(graph, src, reader_node, size)
             if not math.isfinite(lat):
-                lat, hops = 1.0, 8
+                lat, hops = PARTITION_DETOUR_LATENCY_S, PARTITION_DETOUR_HOPS
             total_lat += self._service(
                 src, t, KVS_OP_LATENCY + size / KVS_READ_BW) + lat
             net += lat
             max_hops = max(max_hops, hops)
             all_local &= src == reader_node
         return states, AccessResult(total_lat, max_hops, all_local,
+                                    network_latency=net)
+
+    # -- event-driven variants (parked-waiter KVS queueing) -------------
+    def _kvs_leg_ev(self, node: str, service_s: float):
+        """One KVS service leg as a process fragment: the op parks on the
+        node's KVS FIFO like a CPU-slot waiter, so a capacity grow
+        re-admits it instead of leaving it committed to the old schedule."""
+        res = self.resources.kvs(node)
+        yield ("acquire", res)
+        res.total_service += service_s
+        yield service_s
+        yield ("release", res)
+
+    def put_ev(self, key: StateKey, size: float, payload=None,
+               writer_node: Optional[str] = None,
+               replicate_global: bool = True,
+               global_sync: bool = False, kernel=None):
+        """Event-driven ``put``: drive with ``yield from`` inside a kernel
+        process; returns the ``AccessResult`` with measured latency."""
+        t0 = kernel.now
+        graph = self.graph_fn(t0)
+        src = writer_node or key.storage_address
+        dst = key.storage_address
+        st = StoredState(key, size, payload)
+        lat, hops = self._transfer(graph, src, dst, size)
+        if not math.isfinite(lat):
+            dst = src
+            st = StoredState(key.moved(src), size, payload)
+            lat, hops = 0.0, 0
+        self.local.setdefault(dst, {})[st.key.encoded()] = st
+        self.local.setdefault(dst, {})[key.encoded()] = st
+        if lat > 0:
+            yield lat
+        yield from self._kvs_leg_ev(dst, KVS_OP_LATENCY + size /
+                                    KVS_WRITE_BW)
+        if replicate_global:
+            cloud = self._replicate_record(graph, src, key, st)
+            if cloud is not None and cloud != dst:
+                glat, _ = self._transfer(graph, src, cloud, size)
+                if math.isfinite(glat):
+                    service_s = KVS_OP_LATENCY + size / KVS_WRITE_BW
+                    if global_sync:
+                        yield glat
+                        yield from self._kvs_leg_ev(cloud, service_s)
+                    else:
+                        # async replica: its own parked-waiter process,
+                        # arriving at the region cloud after the WAN leg
+                        kernel.spawn(
+                            self._kvs_leg_ev(cloud, service_s),
+                            label=f"replicate:{key.encoded()}",
+                            at=kernel.now + glat)
+        return AccessResult(kernel.now - t0, hops, src == dst,
+                            network_latency=lat)
+
+    def get_ev(self, key: StateKey, reader_node: str, kernel=None):
+        """Event-driven ``get`` (see ``put_ev``)."""
+        t0 = kernel.now
+        graph = self.graph_fn(t0)
+        enc = key.encoded()
+        st = self.local.get(reader_node, {}).get(enc)
+        if st is not None:
+            yield from self._kvs_leg_ev(
+                reader_node, KVS_OP_LATENCY + st.size / KVS_READ_BW)
+            return st, AccessResult(kernel.now - t0, 0, True)
+        holder = key.storage_address
+        st = self.local.get(holder, {}).get(enc)
+        if st is not None and holder in graph.nodes:
+            lat, hops = self._transfer(graph, holder, reader_node, st.size)
+            if math.isfinite(lat):
+                yield from self._kvs_leg_ev(
+                    holder, KVS_OP_LATENCY + st.size / KVS_READ_BW)
+                yield lat
+                return st, AccessResult(kernel.now - t0, hops, False,
+                                        network_latency=lat)
+        st, serving = self._global_locate(graph, enc, reader_node)
+        if st is not None:
+            src_node = serving or holder
+            lat, hops = self._transfer(graph, src_node, reader_node,
+                                       st.size)
+            if not math.isfinite(lat):
+                lat, hops = PARTITION_DETOUR_LATENCY_S, PARTITION_DETOUR_HOPS
+            yield from self._kvs_leg_ev(
+                src_node, KVS_OP_LATENCY + st.size / KVS_READ_BW)
+            yield lat
+            return st, AccessResult(kernel.now - t0, hops, False,
+                                    from_global=True, network_latency=lat)
+        return None, AccessResult(math.inf, 10**9, False)
+
+    def get_fused_ev(self, keys, reader_node: str, kernel=None):
+        """Event-driven ``get_fused`` (see ``put_ev``)."""
+        t0 = kernel.now
+        graph = self.graph_fn(t0)
+        by_source: Dict[str, float] = {}
+        states = []
+        for key in keys:
+            loc = self._locate(key, reader_node, graph)
+            if loc is None:
+                return None, AccessResult(math.inf, 10**9, False)
+            st, src = loc
+            by_source[src] = by_source.get(src, 0.0) + st.size
+            states.append(st)
+        max_hops, all_local, net = 0, True, 0.0
+        for src, size in by_source.items():
+            lat, hops = self._transfer(graph, src, reader_node, size)
+            if not math.isfinite(lat):
+                lat, hops = PARTITION_DETOUR_LATENCY_S, PARTITION_DETOUR_HOPS
+            yield from self._kvs_leg_ev(
+                src, KVS_OP_LATENCY + size / KVS_READ_BW)
+            if lat > 0:
+                yield lat
+            net += lat
+            max_hops = max(max_hops, hops)
+            all_local &= src == reader_node
+        return states, AccessResult(kernel.now - t0, max_hops, all_local,
                                     network_latency=net)
 
     # ------------------------------------------------------------------
@@ -193,8 +371,9 @@ class TwoTierStorage:
         holder = key.storage_address
         if enc in self.local.get(holder, {}) and holder in graph.nodes:
             return (self.local[holder][enc], holder)
-        if enc in self.global_store:
-            return (self.global_store[enc], self._cloud(graph) or holder)
+        st, serving = self._global_locate(graph, enc, reader)
+        if st is not None:
+            return (st, serving or holder)
         return None
 
     WAN_EFFICIENCY = 0.6   # TCP over 45-75 ms RTT links never hits line rate

@@ -25,9 +25,12 @@ class StatelessPlacement:
 
     def offload_state(self, function_id: str, host: str, t: float,
                       key: StateKey) -> StateKey:
+        """All state goes to the cloud KVS — the *nearest* region's cloud
+        in a multi-region topology, so stateless traffic shards across
+        per-region queues instead of funneling into one global one (with a
+        single cloud this is the original behavior exactly)."""
         graph = self.graph_fn(t)
-        cloud = next((n.id for n in graph.nodes.values() if n.kind == CLOUD),
-                     host)
+        cloud = graph.nearest_of_kind(host, CLOUD) or host
         return key.moved(cloud)
 
 

@@ -108,16 +108,36 @@ def plan_workflow(graph: TopologyGraph, wf: WorkflowSpec, slo: SLO,
                   gamma_per_hop: float = 0.005,
                   compute_kinds=COMPUTE_KINDS,
                   busy: Optional[Dict[str, float]] = None,
-                  now: float = 0.0, busy_weight: float = 1.0) -> Plan:
+                  now: float = 0.0, busy_weight: float = 1.0,
+                  home_nodes: Optional[Sequence[str]] = None,
+                  region_weight: float = 0.0) -> Plan:
     """Greedy Eq. 9 minimizer with vicinity pruning + R-constraint checks.
 
-    ``busy`` (node -> busy-until time) adds HyperDrive-style load awareness:
-    queue wait joins the latency score, spreading concurrent workflows."""
+    ``busy`` (node -> busy-until time) adds HyperDrive-style load
+    awareness: queue wait joins the latency score, spreading concurrent
+    workflows.  When the busy view projects *pending* autoscale grows
+    (``repro.sim.resources``), a pool mid-scale-up scores by its
+    provisioning ready time, not its current queue depth.
+
+    ``home_nodes`` + ``region_weight`` make the score region-aware
+    (multi-region continuum): a candidate is charged how much *farther*
+    from the nearest global-tier home shard (cloud region) it sits than
+    the anchor already is.  Staying equally region-local is free — a
+    satellite over the anchor's region scores like the anchor — but
+    drifting toward a foreign region pays the WAN distance, keeping
+    placements near the shard that serves this workflow's redundancy
+    writes and fallback reads.
+
+    The sink node (R-6 gravity) is the *nearest* node of ``sink_kind``
+    from the entry, so in a multi-region topology each workflow sinks to
+    its own region's cloud rather than a global first-by-id one."""
     placement: Dict[str, str] = {}
     considered = 0
     objective = 0.0
-    cloud = next((n.id for n in graph.nodes.values()
-                  if n.kind == wf.sink_kind), entry_node)
+    cloud = graph.nearest_of_kind(entry_node, wf.sink_kind) or entry_node
+    home_dists = [graph.sssp(h)[0] for h in home_nodes
+                  if h in graph.nodes] \
+        if home_nodes and region_weight > 0.0 else []
     order = wf.topo_order()
     for idx, f in enumerate(order):
         preds = wf.predecessors(f)
@@ -128,6 +148,11 @@ def plan_workflow(graph: TopologyGraph, wf: WorkflowSpec, slo: SLO,
             [n for n in vicinity(graph, anchor, radius_s)
              if graph.nodes[n].kind in compute_kinds]
         considered += len(cands)
+        anchor_home = 0.0
+        if home_dists:
+            anchor_home = min(d.get(anchor, math.inf) for d in home_dists)
+            if not math.isfinite(anchor_home):
+                anchor_home = 0.0
         best, best_cost = None, math.inf
         d = wf.demands[f]
         for n in cands:
@@ -158,6 +183,11 @@ def plan_workflow(graph: TopologyGraph, wf: WorkflowSpec, slo: SLO,
                 continue
             if busy is not None:
                 cost += busy_weight * max(busy.get(n, 0.0) - now, 0.0)
+            if home_dists:
+                hd = min(d.get(n, math.inf) for d in home_dists)
+                if not math.isfinite(hd):
+                    hd = 1.0   # detached from every home: flat penalty
+                cost += region_weight * max(0.0, hd - anchor_home)
             if cost < best_cost:
                 best, best_cost = n, cost
         if best is None:

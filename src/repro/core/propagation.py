@@ -15,7 +15,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.keys import StateKey
 from repro.core.slo import SLO
-from repro.core.topology import TopologyGraph
+from repro.core.topology import CLOUD, TopologyGraph
 
 
 # ---------------------------------------------------------------------------
@@ -135,6 +135,23 @@ class Databelt:
         dec = PlacementDecision(function_id, host, target, path, t_mig)
         self._decisions[function_id] = dec
         return dec
+
+    def plan_terminal_state(self, function_id: str, host: str,
+                            data_size: float, t: float
+                            ) -> PlacementDecision:
+        """Region-aware terminal propagation (multi-region continuum): a
+        terminal function's state has no downstream consumer to walk
+        toward, so Compute targets the *nearest cloud region* — the shard
+        that will serve this key's global-tier fallback reads — instead of
+        leaving the state wherever the function happened to run."""
+        graph = identify(self.graph_fn(t), self.available, t)
+        dst = graph.nearest_of_kind(host, CLOUD)
+        if dst is None or dst == host:
+            dec = PlacementDecision(function_id, host, host, [host], 0.0)
+            self._decisions[function_id] = dec
+            return dec
+        return self.plan_state_placement(function_id, host, dst,
+                                         data_size, t)
 
     # -- Offload (data plane, at function completion) --------------------
     def offload_state(self, function_id: str, host: str, t: float,

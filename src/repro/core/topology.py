@@ -25,6 +25,8 @@ class Node:
     t_orb: float = 20.0         # baseline temperature (C)
     t_max: float = 85.0         # max operational temperature
     position: Optional[Callable] = None   # t -> (x, y, z) meters ECI
+    region: Optional[str] = None          # home region id (multi-region
+                                          # continuum); None = unscoped
     # dynamic state
     mem_used: float = 0.0
     cpu_used: float = 0.0
@@ -173,6 +175,20 @@ class TopologyGraph:
             path.append(prev[path[-1]])
         path.reverse()
         return path, dist[dst]
+
+    def nearest_of_kind(self, src: str, kind: str) -> Optional[str]:
+        """Lowest-latency node of ``kind`` from ``src`` (ties break on node
+        id); the lexicographically first node of the kind when ``src`` can
+        reach none of them, None when the kind is absent.  With a single
+        node of the kind this is a pure lookup (no SSSP pass), so
+        single-region topologies stay on the exact pre-multi-region path."""
+        cands = sorted(n.id for n in self.nodes.values() if n.kind == kind)
+        if not cands:
+            return None
+        if len(cands) == 1 or src not in self.nodes:
+            return cands[0]
+        dist, _ = self.sssp(src)
+        return min(cands, key=lambda c: (dist.get(c, math.inf), c))
 
     def path_latency(self, path: List[str]) -> float:
         return sum(self.latency(a, b) for a, b in zip(path, path[1:]))

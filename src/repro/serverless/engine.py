@@ -74,11 +74,28 @@ class InstanceMetrics:
 class WorkflowEngine:
     def __init__(self, net: ContinuumNetwork, strategy: str = "databelt",
                  slo: SLO = SLO(), fusion_depth: int = 1,
-                 real_compute: bool = False, seed: int = 0):
+                 real_compute: bool = False, seed: int = 0,
+                 kvs_event_driven: bool = False,
+                 region_weight: float = 0.3):
+        """``kvs_event_driven`` switches storage ops from analytic
+        ``SlotResource.request`` queueing to parked-waiter queueing (like
+        CPU slots), so autoscale capacity grows re-admit already-queued
+        KVS ops.  ``region_weight`` scales the planner's region-locality
+        term; it only takes effect on multi-region topologies (several
+        cloud nodes), so single-region runs are bit-identical to the
+        pre-region engine."""
         self.net = net
         self.slo = slo
         self.fusion_depth = max(fusion_depth, 1)
         self.real_compute = real_compute
+        self.kvs_event_driven = kvs_event_driven
+        # region awareness activates only when the topology actually has
+        # several cloud regions
+        self.clouds = sorted(
+            n.id for n in net.graph_at(0.0).nodes.values()
+            if n.kind == "cloud")
+        self.multi_region = len(self.clouds) > 1
+        self.region_weight = region_weight if self.multi_region else 0.0
         # one resource pool per engine: CPU slots (one per core) + KVS
         # queues, shared with the storage layer so every strategy contends
         # on the same queues
@@ -120,7 +137,10 @@ class WorkflowEngine:
                 for nid, n in graph.nodes.items()}
         try:
             plan = plan_workflow(graph, spec, self.slo, entry_node=entry,
-                                 busy=self.node_busy_until, now=t)
+                                 busy=self.node_busy_until, now=t,
+                                 home_nodes=self.clouds
+                                 if self.multi_region else None,
+                                 region_weight=self.region_weight)
         finally:
             for nid, (mu, cu, pu, te) in snap.items():
                 n = graph.nodes[nid]
@@ -146,8 +166,13 @@ class WorkflowEngine:
 
         # the workflow input arrives at the entry node
         src_key = StateKey(wf.workflow_id, entry, "__input__")
-        self.storage.put(src_key, input_bytes, None, kernel.now,
-                         writer_node=entry)
+        if self.kvs_event_driven:
+            yield from self.storage.put_ev(src_key, input_bytes, None,
+                                           writer_node=entry,
+                                           kernel=kernel)
+        else:
+            self.storage.put(src_key, input_bytes, None, kernel.now,
+                             writer_node=entry)
         keys["__input__"] = src_key
         sizes["__input__"] = input_bytes
         if self.real_compute:
@@ -179,7 +204,13 @@ class WorkflowEngine:
                         > self.slo.max_handoff_s:
                     m.slo_violations += 1
             if fused:
-                sts, res = self.storage.get_fused(need, node, kernel.now)
+                t_fetch = kernel.now
+                if self.kvs_event_driven:
+                    sts, res = yield from self.storage.get_fused_ev(
+                        need, node, kernel=kernel)
+                else:
+                    sts, res = self.storage.get_fused(need, node,
+                                                      kernel.now)
                 m.storage_ops += len({k.storage_address for k in need
                                       if k.storage_address != node} or {1})
                 m.reads += len(need)
@@ -188,11 +219,20 @@ class WorkflowEngine:
                 m.read_time += res.latency
                 # one sandbox for the whole group; the grouped prefetch
                 # overlaps with sandbox init
-                yield max(SANDBOX_INIT_S, res.latency)
+                if self.kvs_event_driven:
+                    # the prefetch already consumed simulated time; sleep
+                    # only the sandbox-init remainder it did not overlap
+                    yield max(0.0, t_fetch + SANDBOX_INIT_S - kernel.now)
+                else:
+                    yield max(SANDBOX_INIT_S, res.latency)
             else:
                 lat_sum, hops_list, nloc = 0.0, [], 0
                 for k in need:
-                    _, r = self.storage.get(k, node, kernel.now)
+                    if self.kvs_event_driven:
+                        _, r = yield from self.storage.get_ev(
+                            k, node, kernel=kernel)
+                    else:
+                        _, r = self.storage.get(k, node, kernel.now)
                     lat_sum += r.latency
                     hops_list.append(r.hops)
                     nloc += 1 if r.local else 0
@@ -201,8 +241,12 @@ class WorkflowEngine:
                 m.local_reads += nloc
                 m.hops.extend(hops_list)
                 m.read_time += lat_sum
-                # one sandbox per function, synchronous per-function reads
-                yield SANDBOX_INIT_S * len(g.function_ids) + lat_sum
+                # one sandbox per function; in event mode the synchronous
+                # per-function reads already consumed their time above
+                if self.kvs_event_driven:
+                    yield SANDBOX_INIT_S * len(g.function_ids)
+                else:
+                    yield SANDBOX_INIT_S * len(g.function_ids) + lat_sum
 
             # ---- execute the fused functions ----
             for fname in g.function_ids:
@@ -238,10 +282,17 @@ class WorkflowEngine:
             for fname in g.function_ids:
                 nxt = [j for i, j in wf.edges if i == fname]
                 dst = placement.get(nxt[0]) if nxt else None
-                if self.strategy == "databelt" and dst is not None:
-                    self.placer.plan_state_placement(fname, node, dst,
-                                                     sizes[fname],
-                                                     kernel.now)
+                if self.strategy == "databelt":
+                    if dst is not None:
+                        self.placer.plan_state_placement(fname, node, dst,
+                                                         sizes[fname],
+                                                         kernel.now)
+                    elif self.multi_region:
+                        # terminal state: propagate toward the nearest
+                        # cloud region (the key's fallback-serving shard)
+                        self.placer.plan_terminal_state(fname, node,
+                                                        sizes[fname],
+                                                        kernel.now)
                 key = StateKey(wf.workflow_id, node, fname)
                 key = self.placer.offload_state(fname, node, kernel.now,
                                                 key)
@@ -249,10 +300,16 @@ class WorkflowEngine:
             if fused:
                 merged = sum(max(sizes[f], 1.0) for f in outgoing)
                 first = keys[outgoing[-1]]
-                r = self.storage.put(first, merged, None, kernel.now,
-                                     writer_node=node,
-                                     global_sync=self.strategy ==
-                                     "stateless")
+                if self.kvs_event_driven:
+                    r = yield from self.storage.put_ev(
+                        first, merged, None, writer_node=node,
+                        global_sync=self.strategy == "stateless",
+                        kernel=kernel)
+                else:
+                    r = self.storage.put(first, merged, None, kernel.now,
+                                         writer_node=node,
+                                         global_sync=self.strategy ==
+                                         "stateless")
                 # register the remaining outgoing keys without re-charging
                 for f in outgoing[:-1]:
                     self.storage.put(keys[f], max(sizes[f], 1.0), None,
@@ -260,18 +317,27 @@ class WorkflowEngine:
                                      replicate_global=True, account=False)
                 m.write_time += r.latency
                 m.storage_ops += 1
-                yield r.latency
+                if not self.kvs_event_driven:
+                    yield r.latency
             else:
                 for fname in outgoing:
-                    r = self.storage.put(keys[fname],
-                                         max(sizes[fname], 1.0),
-                                         None, kernel.now,
-                                         writer_node=node,
-                                         global_sync=self.strategy ==
-                                         "stateless")
+                    if self.kvs_event_driven:
+                        r = yield from self.storage.put_ev(
+                            keys[fname], max(sizes[fname], 1.0), None,
+                            writer_node=node,
+                            global_sync=self.strategy == "stateless",
+                            kernel=kernel)
+                    else:
+                        r = self.storage.put(keys[fname],
+                                             max(sizes[fname], 1.0),
+                                             None, kernel.now,
+                                             writer_node=node,
+                                             global_sync=self.strategy ==
+                                             "stateless")
                     m.write_time += r.latency
                     m.storage_ops += 1
-                    yield r.latency
+                    if not self.kvs_event_driven:
+                        yield r.latency
             kernel.log(f"{wf.workflow_id}:done:{g.group_id}")
             yield ("release", cpu)
 
@@ -329,7 +395,11 @@ class WorkflowEngine:
         KVS pools from observed queue depth and the rolling p95 of
         completed instances (``repro.sim.autoscale``).  The run stays
         deterministically replayable; the report carries the controller's
-        actions in ``report.autoscale``."""
+        actions in ``report.autoscale``.
+
+        ``entry`` may be a node id (all instances enter there) or a
+        callable ``instance_index -> node id`` — a multi-region sweep
+        spreads instances over per-region entry points this way."""
         kernel = SimKernel(start=t0, record_trace=record_trace)
         scaler = Autoscaler(kernel, self.resources, autoscale).start() \
             if autoscale is not None else None
@@ -340,8 +410,9 @@ class WorkflowEngine:
                 wf = wf_maker(f"wf{i}")
                 start = kernel.now
                 m = InstanceMetrics()
+                e = entry(i) if callable(entry) else entry
                 yield from self._instance_proc(kernel, wf, input_bytes,
-                                               entry, m)
+                                               e, m)
                 results.append((i, m, start, kernel.now))
                 if scaler is not None:
                     scaler.observe_latency(m.latency)

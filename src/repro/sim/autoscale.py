@@ -23,7 +23,14 @@ instances, and resizes capacities with the classic asymmetric rule pair:
 
 Shrinks drain: ``SlotResource`` retires servers as they free and excess
 held slots fall away one release at a time — in-flight work is never
-preempted.  Every decision is a pure function of simulated state, so runs
+preempted.
+
+With ``provision_delay_s > 0`` scale-ups model real provisioning: the
+decision at t lands at ``t + delay`` (a deferred kernel event), and the
+in-flight grow is published to the ``ResourcePool`` as a *pending* grow so
+the placement planner's busy view scores the pool by its projected
+capacity — a pool mid-scale-up is cheaper than its current queue depth
+suggests (ROADMAP: autoscale-aware placement).  Every decision is a pure function of simulated state, so runs
 with the autoscaler enabled stay deterministically replayable; actions are
 ``kernel.log``-ed into the event trace and collected for the
 ``ParallelReport``.
@@ -55,6 +62,12 @@ class AutoscalePolicy:
                                    # never lower it (initial = provisioned
                                    # hardware)
     max_capacity: int = 64         # growth ceiling per resource
+    provision_delay_s: float = 0.0  # scale-up provisioning time: a grow
+                                   # decided at t lands at t + delay; while
+                                   # in flight it is published to the pool
+                                   # as a *pending* grow so the placement
+                                   # planner can score projected capacity
+                                   # (0 = instant, the original behavior)
     kinds: Tuple[str, ...] = (ResourcePool.CPU, ResourcePool.KVS)
     window: int = 64               # completed-instance latencies kept for
                                    # the rolling p95
@@ -129,6 +142,11 @@ class Autoscaler:
     def _decide(self, res: SlotResource, now: float,
                 p95_breach: bool) -> None:
         p = self.policy
+        if self.pool.pending_grow_ready(res.name) is not None:
+            # a grow is already provisioning: don't double-order capacity
+            # (and don't count the interval as calm either)
+            self._calm[res.name] = 0
+            return
         waiting = res.queue_len(now)
         busy = res.in_service(now)
         cap = res.capacity
@@ -155,9 +173,34 @@ class Autoscaler:
 
     def _resize(self, res: SlotResource, new_cap: int, now: float,
                 reason: str) -> None:
-        old = res.capacity
-        if new_cap == old:
+        if new_cap == res.capacity:
             return
+        delay = self.policy.provision_delay_s
+        if new_cap > res.capacity and delay > 0.0:
+            # provisioning model: the capacity lands after the delay; the
+            # pending grow is published so the planner's busy view can
+            # score the pool by its projected (not current) capacity
+            ready = now + delay
+            self.pool.note_pending_grow(res.name, ready)
+            self.kernel.log(
+                f"autoscale-pending:{res.name}:{res.capacity}->"
+                f"{new_cap}:{reason}")
+            self.kernel.call_at(
+                ready,
+                lambda: self._apply_pending(res, new_cap, reason),
+                label=f"provision:{res.name}")
+            return
+        self._apply(res, new_cap, now, reason)
+
+    def _apply_pending(self, res: SlotResource, new_cap: int,
+                       reason: str) -> None:
+        self.pool.clear_pending_grow(res.name)
+        if new_cap > res.capacity:
+            self._apply(res, new_cap, self.kernel.now, reason)
+
+    def _apply(self, res: SlotResource, new_cap: int, now: float,
+               reason: str) -> None:
+        old = res.capacity
         woken = res.set_capacity(new_cap, now)
         for proc, label in woken:
             self.kernel.log(f"grant:{label}@{res.name}")

@@ -189,7 +189,13 @@ class SlotResource:
 
 class _BusyView:
     """Read-only mapping adapter (``.get(node, default)``) exposing a
-    resource kind's earliest-free times to the placement planner."""
+    resource kind's earliest-free times to the placement planner.
+
+    Autoscale-aware: when the pool records a *pending* capacity grow for
+    the resource (a scale-up decided but still provisioning), the view
+    projects availability at the provisioning ready time — a pool
+    mid-scale-up is cheaper than its current queue depth suggests, so the
+    planner keeps routing to it instead of stampeding the neighbors."""
 
     def __init__(self, pool: "ResourcePool", kind: str):
         self._pool = pool
@@ -197,7 +203,11 @@ class _BusyView:
 
     def get(self, node: str, default: float = 0.0) -> float:
         res = self._pool.peek(self._kind, node)
-        return res.next_free() if res is not None else default
+        if res is None:
+            return default
+        nf = res.next_free()
+        ready = self._pool.pending_grow_ready(res.name)
+        return min(nf, ready) if ready is not None else nf
 
 
 class ResourcePool:
@@ -208,6 +218,9 @@ class ResourcePool:
     def __init__(self, cpu_capacity: Optional[Callable[[str], int]] = None):
         self._res: Dict[Tuple[str, str], SlotResource] = {}
         self._cpu_capacity = cpu_capacity or (lambda node: 1)
+        # resource name -> provisioning ready time of an in-flight grow
+        # (set/cleared by the autoscaler; read by the planner's busy view)
+        self._pending_grow: Dict[str, float] = {}
 
     def peek(self, kind: str, node: str) -> Optional[SlotResource]:
         return self._res.get((kind, node))
@@ -227,6 +240,18 @@ class ResourcePool:
 
     def busy_view(self, kind: str = CPU) -> _BusyView:
         return _BusyView(self, kind)
+
+    # -- pending capacity grows (autoscaler provisioning model) ----------
+    def note_pending_grow(self, name: str, ready_t: float) -> None:
+        """Record that ``name`` has a capacity grow arriving at
+        ``ready_t`` (simulated seconds)."""
+        self._pending_grow[name] = ready_t
+
+    def clear_pending_grow(self, name: str) -> None:
+        self._pending_grow.pop(name, None)
+
+    def pending_grow_ready(self, name: str) -> Optional[float]:
+        return self._pending_grow.get(name)
 
     def resources(self, kind: Optional[str] = None):
         """All live resources (of one kind), in deterministic key order —

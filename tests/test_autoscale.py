@@ -198,10 +198,10 @@ def net_maker():
 
 
 def _closed_loop_run(net_maker, autoscale=None, n=48, clients=24,
-                     record_trace=False):
+                     record_trace=False, **engine_kw):
     from repro.serverless.engine import WorkflowEngine
     from repro.serverless.workflow import flood_workflow
-    eng = WorkflowEngine(net_maker(), strategy="stateless")
+    eng = WorkflowEngine(net_maker(), strategy="stateless", **engine_kw)
     return eng.run_parallel(lambda wid: flood_workflow(wid), n, 2e6,
                             workload=ClosedLoop(clients=clients),
                             record_trace=record_trace,
@@ -232,3 +232,127 @@ def test_deterministic_replay_with_autoscaler(net_maker):
             for x in a.autoscale.actions] == \
         [(x.t, x.resource, x.old_capacity, x.new_capacity, x.reason)
          for x in b.autoscale.actions]
+
+
+# ---------------------------------------------------------------------------
+# event-driven KVS requests (parked-waiter queueing)
+# ---------------------------------------------------------------------------
+def _static_pair_graph():
+    from repro.core.topology import Node, TopologyGraph
+    g = TopologyGraph()
+    g.add_node(Node("h", "edge"))
+    g.add_node(Node("r", "edge"))
+    g.add_link("h", "r", 0.001, 1e9)
+    return g
+
+
+def _ev_read_run(grow_at=None, readers=6):
+    """``readers`` concurrent event-driven reads of a ~1 s-service state
+    pile onto the holder's capacity-1 KVS queue; an optional mid-run grow
+    must re-admit the parked backlog (the analytic path cannot)."""
+    from repro.continuum.storage import TwoTierStorage
+    from repro.core.keys import StateKey
+    g = _static_pair_graph()
+    kernel = SimKernel()
+    pool = ResourcePool()
+    st = TwoTierStorage(lambda t: g, resources=pool)
+    key = StateKey("w", "h", "f")
+    st.put(key, 40e6, t=0.0, writer_node="h", replicate_global=False,
+           account=False)
+    done = []
+
+    def reader(i):
+        _, r = yield from st.get_ev(key, "r", kernel=kernel)
+        done.append((i, kernel.now))
+
+    for i in range(readers):
+        kernel.spawn(reader(i), label=f"r{i}")
+    if grow_at is not None:
+        def grow():
+            yield grow_at
+            for p, lab in pool.kvs("h").set_capacity(readers, kernel.now):
+                kernel.wake(p, lab)
+        kernel.spawn(grow(), label="grow")
+    kernel.run()
+    assert len(done) == readers
+    return kernel.now
+
+
+def test_event_driven_kvs_grow_readmits_parked_backlog():
+    fixed = _ev_read_run()
+    grown = _ev_read_run(grow_at=0.5)
+    assert fixed > 5.5          # six ~1 s ops serialized on one server
+    assert grown < 2.5          # the grow admitted the whole backlog
+    assert grown < fixed
+
+
+def test_event_driven_engine_replay_deterministic(net_maker):
+    pol = AutoscalePolicy(p95_slo_s=10.0)
+    a = _closed_loop_run(net_maker, autoscale=pol, record_trace=True,
+                         kvs_event_driven=True)
+    b = _closed_loop_run(net_maker, autoscale=pol, record_trace=True,
+                         kvs_event_driven=True)
+    assert a.trace == b.trace and len(a.trace) > 0
+    assert a.latencies == b.latencies
+    assert all(m.latency > 0 for m in a)
+
+
+# ---------------------------------------------------------------------------
+# autoscale-aware placement (projected capacity of pending grows)
+# ---------------------------------------------------------------------------
+def test_pending_grow_discounts_busy_view():
+    pool = ResourcePool()
+    pool.kvs("n0").request(0.0, 5.0)
+    view = pool.busy_view(ResourcePool.KVS)
+    assert view.get("n0") == 5.0
+    pool.note_pending_grow("kvs:n0", 1.0)
+    assert view.get("n0") == 1.0            # projected, not current
+    pool.clear_pending_grow("kvs:n0")
+    assert view.get("n0") == 5.0
+
+
+def test_planner_prefers_pool_mid_scale_up():
+    from repro.core.planner import WorkflowSpec, plan_workflow
+    from repro.core.slo import SLO, FunctionDemand
+    from repro.core.topology import Node, TopologyGraph
+    g = TopologyGraph()
+    g.add_node(Node("e", "drone"))          # entry; not a compute kind
+    g.add_node(Node("a", "edge"))
+    g.add_node(Node("b", "edge"))
+    g.add_link("e", "a", 0.01, 1e9)
+    g.add_link("e", "b", 0.01, 1e9)
+    pool = ResourcePool(cpu_capacity=lambda n: 1)
+    pool.cpu("a").request(0.0, 5.0)         # both equally backlogged
+    pool.cpu("b").request(0.0, 5.0)
+    pool.note_pending_grow("cpu:b", 0.5)    # ...but b is mid-scale-up
+    wf = WorkflowSpec(functions=["f"], edges=[],
+                      demands={"f": FunctionDemand("f")},
+                      state_sizes={}, sink_kind="")
+    plan = plan_workflow(g, wf, SLO(), entry_node="e",
+                         busy=pool.busy_view(), now=0.0)
+    assert plan.placement["f"] == "b"
+
+
+def test_provision_delay_defers_grow_and_stays_deterministic():
+    def run():
+        kernel = SimKernel()
+        pool = ResourcePool(cpu_capacity=lambda n: 1)
+        cpu = pool.cpu("n0")
+        policy = AutoscalePolicy(interval_s=0.25, queue_high=1.0,
+                                 provision_delay_s=1.0, max_capacity=16,
+                                 kinds=(ResourcePool.CPU,))
+        scaler = Autoscaler(kernel, pool, policy).start()
+        for i in range(12):
+            kernel.spawn(_holder(kernel, cpu, 1.0), label=f"p{i}")
+        kernel.run()
+        return cpu.capacity, [(a.t, a.old_capacity, a.new_capacity,
+                               a.reason) for a in scaler.actions]
+
+    cap_a, acts_a = run()
+    cap_b, acts_b = run()
+    assert (cap_a, acts_a) == (cap_b, acts_b)   # deterministic
+    ups = [a for a in acts_a if a[2] > a[1]]
+    assert ups and cap_a > 1
+    # every applied grow landed a full provisioning delay after the
+    # earliest control tick that could have ordered it
+    assert min(a[0] for a in ups) >= 0.25 + 1.0

@@ -106,3 +106,48 @@ def test_availability_r5(net):
     assert net.available("cloud0", 0.0)
     sat_avail = [net.available(f"sat{i}", 0.0) for i in range(10)]
     assert any(sat_avail)
+
+
+def test_availability_type_filter_requires_reachable_kinds():
+    """R-5 regression: the default rule is any-neighbor degree, so an
+    orbit-only network (no ground segment at all) still reports its
+    satellites available; ``require_kinds`` tightens this to actual
+    reachability of the required node types."""
+    # dense enough that in-plane ISL chords clear the Earth
+    degree_only = ContinuumNetwork(
+        Constellation(n_planes=6, sats_per_plane=12), sites=[])
+    assert degree_only.available("sat0", 0.0)       # ISL degree > 0
+    typed = ContinuumNetwork(Constellation(n_planes=6, sats_per_plane=12),
+                             sites=[],
+                             require_kinds=("cloud", "edge", "ground"))
+    assert not typed.available("sat0", 0.0)         # no path to ground
+    # with the paper sites present the shell does reach the ground segment
+    full = ContinuumNetwork(Constellation(n_planes=6, sats_per_plane=12),
+                            require_kinds=("cloud", "edge", "ground"))
+    assert any(full.available(f"sat{i}", 0.0) for i in range(72))
+    # non-satellite nodes are always available under either rule
+    assert full.available("cloud0", 0.0)
+
+
+def test_total_partition_global_fallback_detour():
+    """Pins the worst-case detour charged when a reader is partitioned
+    from every replica: the read still completes, at the named constants
+    (previously untested magic numbers)."""
+    from repro.continuum.storage import (PARTITION_DETOUR_HOPS,
+                                         PARTITION_DETOUR_LATENCY_S)
+    from repro.core.topology import Node, TopologyGraph
+    g = TopologyGraph()
+    g.add_node(Node("cloud0", "cloud"))
+    g.add_node(Node("a", "edge"))
+    g.add_node(Node("b", "edge"))          # b: no links at all
+    g.add_link("cloud0", "a", 0.01, 1e9)
+    st = TwoTierStorage(lambda t: g)
+    key = StateKey("w", "cloud0", "f")
+    st.put(key, 1e6, t=0.0, writer_node="cloud0")
+    st.local.clear()                        # only the global replica left
+    s, r = st.get(key, "b", 0.0)
+    assert s is not None and r.from_global
+    assert r.hops == PARTITION_DETOUR_HOPS
+    assert r.network_latency == PARTITION_DETOUR_LATENCY_S
+    assert r.latency >= PARTITION_DETOUR_LATENCY_S
+    assert math.isfinite(r.latency)
