@@ -2,9 +2,12 @@
 
 Sweeps the region-sharded global tier (``repro.continuum.regions``) under
 ``run_parallel`` for all three state strategies.  Each configuration uses
-the layered two-shell constellation and spreads workflow entries over the
-per-region drone sites; the single-region point is the original
-single-``cloud0`` deployment the paper evaluates.
+the layered two-shell constellation; workflow arrivals come from the
+region-aware ``RegionalDiurnal`` generator — every region runs its own
+Poisson process with a diurnal phase offset (follow-the-sun), and each
+instance enters at the drone site of the region that generated it — the
+single-region point is the original single-``cloud0`` deployment the
+paper evaluates.
 
 Acceptance (wired into CI at smoke scale):
 * the region-sharded global tier beats the single-``cloud0`` configuration
@@ -20,18 +23,23 @@ from benchmarks.common import FULL, emit
 from repro.continuum.regions import multiregion_network
 from repro.serverless.engine import WorkflowEngine
 from repro.serverless.workflow import flood_workflow
+from repro.sim.workload import RegionalDiurnal
 
 REGION_COUNTS = (1, 2, 4)
 STRATEGIES = ("databelt", "random", "stateless")
 N = 96 if FULL else 32
 INPUT_BYTES = 2e6
+AGGREGATE_RPS = 20.0     # split evenly across regions: load-comparable
+                         # between the 1- and N-region configurations
 
 
 def _run(n_regions: int, strat: str, record_trace: bool = False):
     eng = WorkflowEngine(multiregion_network(n_regions), strategy=strat)
+    workload = RegionalDiurnal(regions=n_regions, rate=AGGREGATE_RPS,
+                               peak_to_trough=2.0, seed=17)
     return eng.run_parallel(
-        lambda wid: flood_workflow(wid), N, INPUT_BYTES, stagger=0.05,
-        entry=lambda i: f"drone{i % n_regions}",
+        lambda wid: flood_workflow(wid), N, INPUT_BYTES,
+        workload=workload, entry=workload.entry_for,
         record_trace=record_trace)
 
 

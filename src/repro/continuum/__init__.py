@@ -3,4 +3,5 @@ from repro.continuum.network import ContinuumNetwork  # noqa: F401
 from repro.continuum.regions import (GlobalTier, MultiConstellation,  # noqa: F401
                                      RegionSpec, ShellSpec,
                                      multiregion_network, region_sites)
+from repro.continuum.session import StateSession  # noqa: F401
 from repro.continuum.storage import TwoTierStorage  # noqa: F401

@@ -243,11 +243,13 @@ class GlobalTier:
     queue services that shard's traffic.  ``home`` assigns each encoded
     state key a home shard by rendezvous (highest-random-weight) hashing:
     adding or removing a region only remaps the keys that move to/from it,
-    never shuffling the survivors.  Writers replicate to whatever shard is
-    nearest to them (the cheap WAN leg); readers probe the home shard
-    first and fall back cross-region to any shard holding the key.  With a
-    single region every key's home is that region and the tier degrades to
-    the old one-dict global store."""
+    never shuffling the survivors.  Writers fan out to the shard nearest
+    to them (the cheap WAN leg) *and* the key's home shard
+    (``put_replicas``, k=2); readers probe the home shard first and fall
+    back cross-region to any shard holding the key, and a fallback-served
+    read may ``heal`` the home shard (read-repair) so later reads stop
+    re-paying the WAN.  With a single region every key's home is that
+    region and the tier degrades to the old one-dict global store."""
 
     #: shard id used when the topology has no cloud node at all — state is
     #: still retained so the fallback path can serve it from the holder.
@@ -271,15 +273,29 @@ class GlobalTier:
                    key=lambda r: self._weight(r, enc))
 
     def put(self, enc: str, state, region: Optional[str]) -> None:
-        """Record ``enc`` in ``region``'s shard, last-write-wins across
-        the tier: a rewrite that lands on a different shard (the writer
-        moved regions) evicts the stale copy everywhere else, so
-        home-first reads can never resurrect an overwritten value."""
-        target = region or self.UNSHARDED
+        """Record ``enc`` in ``region``'s shard (single-replica compat
+        wrapper over ``put_replicas``)."""
+        self.put_replicas(enc, state, [region] if region else None)
+
+    def put_replicas(self, enc: str, state,
+                     regions: Optional[Sequence[str]]) -> None:
+        """Record ``enc`` in every shard of ``regions`` (the k-replica
+        fan-out set), last-write-wins across the tier: a rewrite whose
+        replica set no longer covers a shard (the writer moved regions)
+        evicts the stale copy there, so home-first reads can never
+        resurrect an overwritten value."""
+        targets = list(regions) if regions else [self.UNSHARDED]
         for r, shard in self.shards.items():
-            if r != target:
+            if r not in targets:
                 shard.pop(enc, None)
-        self.shards.setdefault(target, {})[enc] = state
+        for target in targets:
+            self.shards.setdefault(target, {})[enc] = state
+
+    def heal(self, enc: str, region: str, state) -> None:
+        """Read-repair: re-populate ``region``'s shard (the key's home)
+        with the value a fallback replica just served, so the next
+        home-first probe hits instead of re-paying the cross-region WAN."""
+        self.shards.setdefault(region, {})[enc] = state
 
     def has(self, enc: str, region: str) -> bool:
         return enc in self.shards.get(region, {})

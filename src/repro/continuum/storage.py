@@ -3,36 +3,46 @@
 Reads resolve through the Databelt State Key: local hit (same node) costs
 only the KVS op; otherwise the value streams over the lowest-latency path.
 The global tier provides redundancy — every write also (asynchronously)
-lands in the global KVS, so a vanished local copy falls back there.
+lands in the global KVS with **k=2 fan-out** (the writer-nearest region's
+shard plus the key's *home* shard), so a vanished local copy falls back
+there, and a home-shard miss that is served cross-region *read-repairs*
+the home shard instead of re-paying the WAN on every subsequent read.
 
 The global tier is **region-sharded** (``repro.continuum.regions.
 GlobalTier``): each encoded key has a *home* region chosen by rendezvous
-hashing over the cloud nodes, writers replicate to the region nearest to
-them, and reads probe the home shard first before falling back
-cross-region.  With a single cloud every key's home is that cloud and the
-data path is identical to the original single-``cloud0`` design — the
-per-region shards only start spreading load when the topology actually has
-several regions.
+hashing over the cloud nodes, and reads probe the home shard first before
+falling back cross-region.  With a single cloud every key's home is that
+cloud and the data path is identical to the original single-``cloud0``
+design — the per-region shards only start spreading load when the
+topology actually has several regions.
 
 Queueing happens on first-class simulation resources: each node's KVS is a
 capacity-1 ``SlotResource`` FIFO owned by a ``ResourcePool`` (shared with
 the workflow engine's CPU slots), so Databelt / random / stateless contend
-on the same queues under parallel load.  Two queueing styles:
+on the same queues under parallel load.
 
-* **analytic** (``put``/``get``/``get_fused``) — the op calls
-  ``SlotResource.request`` which commits its start slot at enqueue; used
-  by the sequential path and the default engine mode.  When a
-  ``SimKernel`` is attached as ``scheduler``, the async global-replication
-  leg becomes a real deferred event.
-* **event-driven** (``put_ev``/``get_ev``/``get_fused_ev``) — generator
-  variants that park on the KVS queue as held-slot waiters, exactly like
-  CPU slots.  A capacity grow (``SlotResource.set_capacity``) re-admits
-  the queued backlog instantly, which is what lets the autoscaler help
-  *already-queued* KVS ops (ROADMAP: event-driven KVS requests).
+Every operation runs through **one internal path** (``_op_put`` /
+``_op_get`` / ``_op_get_fused``): a generator parameterized by an *op
+clock* that decides how timed legs are paid:
+
+* ``_AnalyticClock`` — committed-schedule accounting: KVS legs call
+  ``SlotResource.request`` (start slot fixed at enqueue), latency sums
+  into a virtual elapsed, nothing is yielded.  Drives the synchronous
+  ``put``/``get``/``get_fused`` entry points and ``StateSession``'s
+  ``analytic`` mode.
+* ``_EventClock`` — parked-waiter queueing: KVS legs ``acquire``/
+  ``release`` the queue like CPU slots and sleeps are real kernel yields,
+  so an autoscale capacity grow re-admits the *already-queued* backlog.
+  Drives ``StateSession``'s default ``event`` mode.
+
+The preferred engine-facing surface is ``repro.continuum.session.
+StateSession``; the legacy generator entry points ``put_ev`` / ``get_ev``
+/ ``get_fused_ev`` remain as thin deprecated shims over the same path.
 """
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -68,6 +78,101 @@ class AccessResult:
     network_latency: float = 0.0  # path latency + wire transfer only
 
 
+# ---------------------------------------------------------------------------
+# op clocks: how one storage operation pays for its timed legs
+# ---------------------------------------------------------------------------
+class _AnalyticClock:
+    """Committed-schedule accounting (no simulated sleeping).
+
+    KVS legs enqueue via ``SlotResource.request`` — the start slot is
+    committed immediately — and all waits/latencies sum into a virtual
+    ``elapsed`` that becomes the op's reported latency.  Fused-read legs
+    are issued *in parallel* at the op's start time (the grouped prefetch
+    fans out one request per source node simultaneously).  The async
+    global-replication leg becomes a deferred kernel event when a kernel
+    is attached, else inline queue accounting (sequential mode)."""
+
+    def __init__(self, storage: "TwoTierStorage", t: float, kernel=None):
+        self.storage = storage
+        self.t0 = t
+        self.elapsed = 0.0
+        self.kernel = kernel if kernel is not None else storage.scheduler
+
+    @property
+    def now(self) -> float:
+        return self.t0 + self.elapsed
+
+    def total(self) -> float:
+        return self.elapsed
+
+    def sleep(self, dt: float):
+        self.elapsed += dt
+        return
+        yield  # noqa: unreachable — makes this a generator
+
+    def kvs_leg(self, node: str, service_s: float):
+        wait = self.storage.resources.kvs(node).request(self.now, service_s)
+        self.elapsed += wait + service_s
+        return
+        yield  # noqa: unreachable — makes this a generator
+
+    def fused_leg(self, node: str, service_s: float):
+        wait = self.storage.resources.kvs(node).request(self.t0, service_s)
+        self.elapsed += wait + service_s
+        return
+        yield  # noqa: unreachable — makes this a generator
+
+    def async_replica(self, node: str, wan_lat: float, service_s: float,
+                      label: str):
+        arrive = self.now + wan_lat
+        q = self.storage.resources.kvs(node)
+        if self.kernel is not None:
+            self.kernel.call_at(arrive,
+                                lambda: q.request(arrive, service_s),
+                                label=label)
+        else:
+            q.request(arrive, service_s)
+
+
+class _EventClock:
+    """Parked-waiter queueing: every leg is a real kernel event.
+
+    KVS legs hold the queue's slot (``acquire``/``release``) exactly like
+    CPU slots, so a capacity grow re-admits queued ops; transfers are
+    kernel sleeps; the async replica is its own spawned process arriving
+    at the target after the WAN leg."""
+
+    def __init__(self, storage: "TwoTierStorage", kernel):
+        self.storage = storage
+        self.kernel = kernel
+        self.t0 = kernel.now
+
+    @property
+    def now(self) -> float:
+        return self.kernel.now
+
+    def total(self) -> float:
+        return self.kernel.now - self.t0
+
+    def sleep(self, dt: float):
+        if dt > 0:
+            yield dt
+
+    def kvs_leg(self, node: str, service_s: float):
+        res = self.storage.resources.kvs(node)
+        yield ("acquire", res)
+        res.total_service += service_s
+        yield service_s
+        yield ("release", res)
+
+    fused_leg = kvs_leg
+
+    def async_replica(self, node: str, wan_lat: float, service_s: float,
+                      label: str):
+        self.kernel.spawn(self.kvs_leg(node, service_s), label=label,
+                          at=self.kernel.now + wan_lat)
+
+
 class TwoTierStorage:
     def __init__(self, graph_fn: Callable[[float], TopologyGraph],
                  resources: Optional[ResourcePool] = None):
@@ -86,31 +191,47 @@ class TwoTierStorage:
         # events; None falls back to inline accounting (sequential mode)
         self.scheduler = None
 
-    def _service(self, node: str, t: float, service_s: float) -> float:
-        """FIFO queueing at the node's KVS; returns total (wait+service)."""
-        return self.resources.kvs(node).request(t, service_s) + service_s
-
     @staticmethod
     def _clouds(graph: TopologyGraph) -> List[str]:
         return sorted(n.id for n in graph.nodes.values()
                       if n.kind == CLOUD)
 
-    def _replicate_record(self, graph: TopologyGraph, src: str,
-                          key: StateKey, st: StoredState) -> Optional[str]:
-        """Register the global replica in its shard — the region *nearest*
-        to the writer (the cheap WAN leg) — and return that region's cloud
-        node, or None when the topology has no cloud."""
-        target = graph.nearest_of_kind(src, CLOUD)
-        self.global_tier.put(key.encoded(), st, target)
-        return target
+    # -- global-tier replication (k=2 fan-out) --------------------------
+    def _replicate_targets(self, graph: TopologyGraph, src: str,
+                           enc: str) -> List[str]:
+        """Replica fan-out for a write from ``src``: the writer-nearest
+        region (the cheap WAN leg, primary durability) plus the key's
+        *home* shard — where every fallback read probes first.  With one
+        cloud both collapse to it (k=1, the original design)."""
+        nearest = graph.nearest_of_kind(src, CLOUD)
+        if nearest is None:
+            return []
+        home = self.global_tier.home(enc, self._clouds(graph))
+        return [nearest] if home == nearest else [nearest, home]
 
-    def _global_locate(self, graph: TopologyGraph, enc: str, reader: str
+    def _replicate_record(self, graph: TopologyGraph, src: str,
+                          key: StateKey, st: StoredState) -> List[str]:
+        """Register the global replicas in their shards and return the
+        target cloud nodes (empty when the topology has no cloud — the
+        value is then retained unsharded so fallback can still serve it)."""
+        enc = key.encoded()
+        targets = self._replicate_targets(graph, src, enc)
+        self.global_tier.put_replicas(enc, st, targets or None)
+        return targets
+
+    def _global_locate(self, graph: TopologyGraph, enc: str, reader: str,
+                       heal: bool = False
                        ) -> Tuple[Optional[StoredState], Optional[str]]:
         """Resolve ``enc`` through the sharded global tier: the key's home
         region first, then cross-region fallback to the replica nearest
         the reader.  Returns ``(state, serving_cloud)``; ``serving_cloud``
         is None when the value exists but no in-graph cloud holds it (the
-        unsharded legacy shard) — the caller then charges the holder."""
+        unsharded legacy shard) — the caller then charges the holder.
+
+        ``heal`` enables read-repair: a home-shard miss served from a
+        fallback replica re-populates the home shard, so the *next* read
+        hits home instead of re-paying the cross-region WAN.  Only real
+        read paths heal — pure peeks (SLO accounting) must not mutate."""
         clouds = self._clouds(graph)
         if clouds:
             home = self.global_tier.home(enc, clouds)
@@ -125,19 +246,23 @@ class TwoTierStorage:
                         lat = math.inf
                     return (lat, r)
                 best = min(holders, key=rank)
-                return (self.global_tier.get(enc, best),
-                        best if best in graph.nodes else None)
+                st = self.global_tier.get(enc, best)
+                if heal:
+                    self.global_tier.heal(enc, home, st)
+                return st, best if best in graph.nodes else None
             return None, None
         return self.global_tier.get_any(enc), None
 
     # ------------------------------------------------------------------
-    def put(self, key: StateKey, size: float, payload=None, t: float = 0.0,
-            writer_node: Optional[str] = None,
-            replicate_global: bool = True,
-            global_sync: bool = False,
-            account: bool = True) -> AccessResult:
+    # the one internal path per operation (clock-parameterized generators)
+    # ------------------------------------------------------------------
+    def _op_put(self, key: StateKey, size: float, payload, clock,
+                writer_node: Optional[str] = None,
+                replicate_global: bool = True,
+                global_sync: bool = False,
+                account: bool = True):
         """Write from ``writer_node`` to ``key.storage_address``."""
-        graph = self.graph_fn(t)
+        graph = self.graph_fn(clock.now)
         src = writer_node or key.storage_address
         dst = key.storage_address
         st = StoredState(key, size, payload)
@@ -154,62 +279,65 @@ class TwoTierStorage:
             if replicate_global:
                 self._replicate_record(graph, src, key, st)
             return AccessResult(0.0, hops, src == dst)
-        ser = self._service(dst, t, KVS_OP_LATENCY + size / KVS_WRITE_BW)
-        total = ser + lat
+        # leg order is the same in BOTH modes (the redesign's contract:
+        # the mode changes how legs are paid, never which legs or their
+        # order): the write commits the destination KVS slot at op start
+        # — the commit-at-enqueue model the analytic path always used —
+        # then pays the transfer.  NOTE this deliberately supersedes the
+        # pre-redesign opt-in event path, which joined the dst queue only
+        # after the transfer; the event default is re-baselined on it.
+        service_s = KVS_OP_LATENCY + size / KVS_WRITE_BW
+        yield from clock.kvs_leg(dst, service_s)
+        yield from clock.sleep(lat)
         if replicate_global:
-            # redundancy write to the nearest region's cloud KVS (paper:
-            # write times are nearly system-independent because every
-            # system pays this cloud-bound leg)
-            cloud = self._replicate_record(graph, src, key, st)
-            if cloud is not None and cloud != dst:
+            # redundancy writes: the nearest region's shard (paper: write
+            # times are nearly system-independent because every system
+            # pays this cloud-bound leg) plus the key's home shard
+            for i, cloud in enumerate(self._replicate_record(graph, src,
+                                                             key, st)):
+                if cloud == dst:
+                    continue
                 glat, _ = self._transfer(graph, src, cloud, size)
-                if math.isfinite(glat):
-                    service_s = KVS_OP_LATENCY + size / KVS_WRITE_BW
-                    if global_sync:
-                        # stateless-style synchronous durability: the
-                        # cloud write is on the critical path
-                        gsrv = self._service(cloud, t + total + glat,
-                                             service_s)
-                        total += glat + gsrv
-                    elif self.scheduler is not None:
-                        # async replication as a real deferred event: the
-                        # replica occupies the cloud KVS queue when it
-                        # arrives, off this writer's critical path
-                        arrive = t + total + glat
-                        cloud_q = self.resources.kvs(cloud)
-                        self.scheduler.call_at(
-                            arrive,
-                            lambda: cloud_q.request(arrive, service_s),
-                            label=f"replicate:{key.encoded()}")
-                    else:
-                        # sequential fallback: inline queue accounting
-                        self._service(cloud, t + total + glat, service_s)
-        return AccessResult(total, hops, src == dst,
+                if not math.isfinite(glat):
+                    continue
+                if global_sync and i == 0:
+                    # stateless-style synchronous durability: the primary
+                    # (nearest-region) cloud write is on the critical path
+                    yield from clock.sleep(glat)
+                    yield from clock.kvs_leg(cloud, service_s)
+                else:
+                    # async replica off the writer's critical path: it
+                    # occupies the target cloud's KVS queue on arrival
+                    clock.async_replica(cloud, glat, service_s,
+                                        f"replicate:{key.encoded()}")
+        return AccessResult(clock.total(), hops, src == dst,
                             network_latency=lat)
 
-    def get(self, key: StateKey, reader_node: str,
-            t: float = 0.0) -> Tuple[Optional[StoredState], AccessResult]:
-        graph = self.graph_fn(t)
+    def _op_get(self, key: StateKey, reader_node: str, clock):
+        graph = self.graph_fn(clock.now)
         enc = key.encoded()
         # local tier on the reader itself
         st = self.local.get(reader_node, {}).get(enc)
         if st is not None:
-            ser = self._service(reader_node, t,
-                                KVS_OP_LATENCY + st.size / KVS_READ_BW)
-            return st, AccessResult(ser, 0, True)
+            yield from clock.kvs_leg(reader_node,
+                                     KVS_OP_LATENCY + st.size / KVS_READ_BW)
+            return st, AccessResult(clock.total(), 0, True)
         # local tier on the address node
         holder = key.storage_address
         st = self.local.get(holder, {}).get(enc)
         if st is not None and holder in graph.nodes:
             lat, hops = self._transfer(graph, holder, reader_node, st.size)
             if math.isfinite(lat):
-                ser = self._service(holder, t,
-                                    KVS_OP_LATENCY + st.size / KVS_READ_BW)
-                return st, AccessResult(ser + lat, hops,
-                                        False, network_latency=lat)
+                yield from clock.kvs_leg(
+                    holder, KVS_OP_LATENCY + st.size / KVS_READ_BW)
+                yield from clock.sleep(lat)
+                return st, AccessResult(clock.total(), hops, False,
+                                        network_latency=lat)
         # global tier fallback (holder missing or unreachable): home
-        # shard first, then cross-region
-        st, serving = self._global_locate(graph, enc, reader_node)
+        # shard first, then cross-region — healing the home shard when
+        # the fallback served the read
+        st, serving = self._global_locate(graph, enc, reader_node,
+                                          heal=True)
         if st is not None:
             src_node = serving or holder
             lat, hops = self._transfer(graph, src_node, reader_node,
@@ -217,132 +345,21 @@ class TwoTierStorage:
             if not math.isfinite(lat):
                 # total partition: charge a worst-case detour, keep running
                 lat, hops = PARTITION_DETOUR_LATENCY_S, PARTITION_DETOUR_HOPS
-            ser = self._service(src_node, t,
-                                KVS_OP_LATENCY + st.size / KVS_READ_BW)
-            return st, AccessResult(ser + lat, hops, False,
-                                    from_global=True, network_latency=lat)
-        return None, AccessResult(math.inf, 10**9, False)
-
-    def get_fused(self, keys, reader_node: str, t: float = 0.0):
-        """Grouped retrieval for a fusion group: ONE request per source node
-        (paper §4.2) instead of one per function."""
-        graph = self.graph_fn(t)
-        by_source: Dict[str, float] = {}
-        states = []
-        for key in keys:
-            loc = self._locate(key, reader_node, graph)
-            if loc is None:
-                return None, AccessResult(math.inf, 10**9, False)
-            st, src = loc
-            by_source[src] = by_source.get(src, 0.0) + st.size
-            states.append(st)
-        total_lat, max_hops, all_local, net = 0.0, 0, True, 0.0
-        for src, size in by_source.items():
-            lat, hops = self._transfer(graph, src, reader_node, size)
-            if not math.isfinite(lat):
-                lat, hops = PARTITION_DETOUR_LATENCY_S, PARTITION_DETOUR_HOPS
-            total_lat += self._service(
-                src, t, KVS_OP_LATENCY + size / KVS_READ_BW) + lat
-            net += lat
-            max_hops = max(max_hops, hops)
-            all_local &= src == reader_node
-        return states, AccessResult(total_lat, max_hops, all_local,
-                                    network_latency=net)
-
-    # -- event-driven variants (parked-waiter KVS queueing) -------------
-    def _kvs_leg_ev(self, node: str, service_s: float):
-        """One KVS service leg as a process fragment: the op parks on the
-        node's KVS FIFO like a CPU-slot waiter, so a capacity grow
-        re-admits it instead of leaving it committed to the old schedule."""
-        res = self.resources.kvs(node)
-        yield ("acquire", res)
-        res.total_service += service_s
-        yield service_s
-        yield ("release", res)
-
-    def put_ev(self, key: StateKey, size: float, payload=None,
-               writer_node: Optional[str] = None,
-               replicate_global: bool = True,
-               global_sync: bool = False, kernel=None):
-        """Event-driven ``put``: drive with ``yield from`` inside a kernel
-        process; returns the ``AccessResult`` with measured latency."""
-        t0 = kernel.now
-        graph = self.graph_fn(t0)
-        src = writer_node or key.storage_address
-        dst = key.storage_address
-        st = StoredState(key, size, payload)
-        lat, hops = self._transfer(graph, src, dst, size)
-        if not math.isfinite(lat):
-            dst = src
-            st = StoredState(key.moved(src), size, payload)
-            lat, hops = 0.0, 0
-        self.local.setdefault(dst, {})[st.key.encoded()] = st
-        self.local.setdefault(dst, {})[key.encoded()] = st
-        if lat > 0:
-            yield lat
-        yield from self._kvs_leg_ev(dst, KVS_OP_LATENCY + size /
-                                    KVS_WRITE_BW)
-        if replicate_global:
-            cloud = self._replicate_record(graph, src, key, st)
-            if cloud is not None and cloud != dst:
-                glat, _ = self._transfer(graph, src, cloud, size)
-                if math.isfinite(glat):
-                    service_s = KVS_OP_LATENCY + size / KVS_WRITE_BW
-                    if global_sync:
-                        yield glat
-                        yield from self._kvs_leg_ev(cloud, service_s)
-                    else:
-                        # async replica: its own parked-waiter process,
-                        # arriving at the region cloud after the WAN leg
-                        kernel.spawn(
-                            self._kvs_leg_ev(cloud, service_s),
-                            label=f"replicate:{key.encoded()}",
-                            at=kernel.now + glat)
-        return AccessResult(kernel.now - t0, hops, src == dst,
-                            network_latency=lat)
-
-    def get_ev(self, key: StateKey, reader_node: str, kernel=None):
-        """Event-driven ``get`` (see ``put_ev``)."""
-        t0 = kernel.now
-        graph = self.graph_fn(t0)
-        enc = key.encoded()
-        st = self.local.get(reader_node, {}).get(enc)
-        if st is not None:
-            yield from self._kvs_leg_ev(
-                reader_node, KVS_OP_LATENCY + st.size / KVS_READ_BW)
-            return st, AccessResult(kernel.now - t0, 0, True)
-        holder = key.storage_address
-        st = self.local.get(holder, {}).get(enc)
-        if st is not None and holder in graph.nodes:
-            lat, hops = self._transfer(graph, holder, reader_node, st.size)
-            if math.isfinite(lat):
-                yield from self._kvs_leg_ev(
-                    holder, KVS_OP_LATENCY + st.size / KVS_READ_BW)
-                yield lat
-                return st, AccessResult(kernel.now - t0, hops, False,
-                                        network_latency=lat)
-        st, serving = self._global_locate(graph, enc, reader_node)
-        if st is not None:
-            src_node = serving or holder
-            lat, hops = self._transfer(graph, src_node, reader_node,
-                                       st.size)
-            if not math.isfinite(lat):
-                lat, hops = PARTITION_DETOUR_LATENCY_S, PARTITION_DETOUR_HOPS
-            yield from self._kvs_leg_ev(
+            yield from clock.kvs_leg(
                 src_node, KVS_OP_LATENCY + st.size / KVS_READ_BW)
-            yield lat
-            return st, AccessResult(kernel.now - t0, hops, False,
+            yield from clock.sleep(lat)
+            return st, AccessResult(clock.total(), hops, False,
                                     from_global=True, network_latency=lat)
         return None, AccessResult(math.inf, 10**9, False)
 
-    def get_fused_ev(self, keys, reader_node: str, kernel=None):
-        """Event-driven ``get_fused`` (see ``put_ev``)."""
-        t0 = kernel.now
-        graph = self.graph_fn(t0)
+    def _op_get_fused(self, keys, reader_node: str, clock):
+        """Grouped retrieval for a fusion group: ONE request per source
+        node (paper §4.2) instead of one per function."""
+        graph = self.graph_fn(clock.now)
         by_source: Dict[str, float] = {}
         states = []
         for key in keys:
-            loc = self._locate(key, reader_node, graph)
+            loc = self._locate(key, reader_node, graph, heal=True)
             if loc is None:
                 return None, AccessResult(math.inf, 10**9, False)
             st, src = loc
@@ -353,25 +370,97 @@ class TwoTierStorage:
             lat, hops = self._transfer(graph, src, reader_node, size)
             if not math.isfinite(lat):
                 lat, hops = PARTITION_DETOUR_LATENCY_S, PARTITION_DETOUR_HOPS
-            yield from self._kvs_leg_ev(
+            yield from clock.fused_leg(
                 src, KVS_OP_LATENCY + size / KVS_READ_BW)
-            if lat > 0:
-                yield lat
+            yield from clock.sleep(lat)
             net += lat
             max_hops = max(max_hops, hops)
             all_local &= src == reader_node
-        return states, AccessResult(kernel.now - t0, max_hops, all_local,
+        return states, AccessResult(clock.total(), max_hops, all_local,
                                     network_latency=net)
 
     # ------------------------------------------------------------------
-    def _locate(self, key: StateKey, reader: str, graph):
+    # synchronous entry points (analytic clock, drained inline)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _drain(gen):
+        """Run a clock-parameterized op under an analytic clock: the
+        generator never yields, so exhausting it returns the result."""
+        try:
+            next(gen)
+        except StopIteration as stop:
+            return stop.value
+        raise RuntimeError(
+            "analytic storage op yielded — event-mode ops must be driven "
+            "on a kernel via StateSession")
+
+    def put(self, key: StateKey, size: float, payload=None, t: float = 0.0,
+            writer_node: Optional[str] = None,
+            replicate_global: bool = True,
+            global_sync: bool = False,
+            account: bool = True) -> AccessResult:
+        """Synchronous write from ``writer_node`` to
+        ``key.storage_address`` (analytic queue accounting)."""
+        return self._drain(self._op_put(
+            key, size, payload, _AnalyticClock(self, t),
+            writer_node=writer_node, replicate_global=replicate_global,
+            global_sync=global_sync, account=account))
+
+    def get(self, key: StateKey, reader_node: str,
+            t: float = 0.0) -> Tuple[Optional[StoredState], AccessResult]:
+        """Synchronous read (analytic queue accounting)."""
+        return self._drain(self._op_get(key, reader_node,
+                                        _AnalyticClock(self, t)))
+
+    def get_fused(self, keys, reader_node: str, t: float = 0.0):
+        """Synchronous grouped read (analytic queue accounting)."""
+        return self._drain(self._op_get_fused(keys, reader_node,
+                                              _AnalyticClock(self, t)))
+
+    # ------------------------------------------------------------------
+    # deprecated event-driven shims (use repro.continuum.session instead)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _deprecated(name: str):
+        warnings.warn(
+            f"TwoTierStorage.{name} is deprecated; use "
+            f"repro.continuum.session.StateSession (event mode) instead",
+            DeprecationWarning, stacklevel=3)
+
+    def put_ev(self, key: StateKey, size: float, payload=None,
+               writer_node: Optional[str] = None,
+               replicate_global: bool = True,
+               global_sync: bool = False, kernel=None):
+        """Deprecated: event-driven ``put`` — drive with ``yield from``
+        inside a kernel process.  Use ``StateSession.put`` instead."""
+        self._deprecated("put_ev")
+        return self._op_put(key, size, payload, _EventClock(self, kernel),
+                            writer_node=writer_node,
+                            replicate_global=replicate_global,
+                            global_sync=global_sync)
+
+    def get_ev(self, key: StateKey, reader_node: str, kernel=None):
+        """Deprecated: event-driven ``get``.  Use ``StateSession.get``."""
+        self._deprecated("get_ev")
+        return self._op_get(key, reader_node, _EventClock(self, kernel))
+
+    def get_fused_ev(self, keys, reader_node: str, kernel=None):
+        """Deprecated: event-driven ``get_fused``.  Use
+        ``StateSession.get_fused``."""
+        self._deprecated("get_fused_ev")
+        return self._op_get_fused(keys, reader_node,
+                                  _EventClock(self, kernel))
+
+    # ------------------------------------------------------------------
+    def _locate(self, key: StateKey, reader: str, graph,
+                heal: bool = False):
         enc = key.encoded()
         if enc in self.local.get(reader, {}):
             return (self.local[reader][enc], reader)
         holder = key.storage_address
         if enc in self.local.get(holder, {}) and holder in graph.nodes:
             return (self.local[holder][enc], holder)
-        st, serving = self._global_locate(graph, enc, reader)
+        st, serving = self._global_locate(graph, enc, reader, heal=heal)
         if st is not None:
             return (st, serving or holder)
         return None

@@ -1,5 +1,7 @@
 from repro.core.topology import Node, Link, TopologyGraph  # noqa: F401
 from repro.core.keys import StateKey  # noqa: F401
+from repro.core.strategy import (StateStrategy, available_strategies,  # noqa: F401
+                                 make_strategy, register_strategy)
 from repro.core.propagation import identify, compute, offload, Databelt  # noqa: F401
 from repro.core.fusion import FusionGroup, plan_fusion_groups  # noqa: F401
 from repro.core.baselines import RandomPlacement, StatelessPlacement  # noqa: F401

@@ -1,27 +1,27 @@
 """Baseline state-placement strategies from the paper's evaluation:
 
 * Stateless — all state lives in the global KVS on the cloud node; every
-  function fetches from / writes to the cloud.
+  function fetches from / writes to the cloud, and every write pays the
+  synchronous global-tier durability leg (``global_sync``).
 * Random    — state is stored on a uniformly random cluster node.
+
+Both implement the ``StateStrategy`` contract (`repro.core.strategy`) and
+are registered as ``"stateless"`` / ``"random"``.
 """
 from __future__ import annotations
 
 import random
-from typing import Callable, Optional
 
 from repro.core.keys import StateKey
 from repro.core.slo import SLO
-from repro.core.topology import CLOUD, TopologyGraph
+from repro.core.strategy import StateStrategy, register_strategy
+from repro.core.topology import CLOUD
 
 
-class StatelessPlacement:
-    name = "stateless"
-
-    def __init__(self, graph_fn, available, slo: SLO = SLO()):
-        self.graph_fn = graph_fn
-
-    def plan_state_placement(self, function_id, host, dst, data_size, t):
-        return None
+@register_strategy("stateless")
+class StatelessPlacement(StateStrategy):
+    # the baseline's defining cost: cloud durability on the critical path
+    global_sync = True
 
     def offload_state(self, function_id: str, host: str, t: float,
                       key: StateKey) -> StateKey:
@@ -34,17 +34,12 @@ class StatelessPlacement:
         return key.moved(cloud)
 
 
-class RandomPlacement:
-    name = "random"
-
-    def __init__(self, graph_fn, available, slo: SLO = SLO(),
+@register_strategy("random")
+class RandomPlacement(StateStrategy):
+    def __init__(self, graph_fn, available=None, slo: SLO = SLO(), *,
                  seed: int = 0):
-        self.graph_fn = graph_fn
-        self.available = available
+        super().__init__(graph_fn, available, slo, seed=seed)
         self.rng = random.Random(seed)
-
-    def plan_state_placement(self, function_id, host, dst, data_size, t):
-        return None
 
     def offload_state(self, function_id: str, host: str, t: float,
                       key: StateKey) -> StateKey:

@@ -15,6 +15,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.keys import StateKey
 from repro.core.slo import SLO
+from repro.core.strategy import StateStrategy, register_strategy
 from repro.core.topology import CLOUD, TopologyGraph
 
 
@@ -108,17 +109,19 @@ class PlacementDecision:
     t_mig: float
 
 
-class Databelt:
+@register_strategy("databelt")
+class Databelt(StateStrategy):
     """Control-plane service: precomputes placement decisions (Identify +
     Compute), which the data plane retrieves at Offload time (paper §4.1:
     decisions are precomputed so function execution is unaffected)."""
 
+    cpu_pct_proxy = 17.0     # paper Table 2: +1% CPU for the control plane
+    ram_mb_proxy = 1320.0
+
     def __init__(self, graph_fn: Callable[[float], TopologyGraph],
                  available: Callable[[str, float], bool],
-                 slo: SLO = SLO()):
-        self.graph_fn = graph_fn
-        self.available = available
-        self.slo = slo
+                 slo: SLO = SLO(), *, seed: int = 0):
+        super().__init__(graph_fn, available, slo, seed=seed)
         self._decisions: Dict[str, PlacementDecision] = {}
 
     # -- Identify + Compute (control plane, ahead of execution) ----------

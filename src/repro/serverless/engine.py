@@ -6,9 +6,23 @@ per-node KVS service queues are first-class ``SlotResource`` FIFOs in one
 ``ResourcePool``, so parallel workflow executions contend for cores and
 storage exactly where the paper's evaluation does (§6.3, Tables 2/3,
 Fig 13).  Function placement always uses the HyperDrive-style planner; the
-three *state* strategies (databelt / random / stateless) differ only in
-where produced state lands — isolating the paper's contribution exactly as
-its evaluation does.
+state strategies (``repro.core.strategy`` registry: databelt / random /
+stateless / any registered policy) differ only in where produced state
+lands — isolating the paper's contribution exactly as its evaluation does.
+
+Every state touch goes through ONE surface: a per-instance
+``StateSession`` (``repro.continuum.session``) with exactly
+``put``/``get``/``get_fused``, all kernel-yieldable generators.  The
+engine's queueing ``mode`` — ``"event"`` (default: storage ops park on
+the KVS FIFOs like CPU slots, so autoscale grows re-admit queued backlog)
+vs ``"analytic"`` (committed-schedule accounting, the pre-event-driven
+engine pinned bit-identically) — lives entirely in the session; the
+instance process is mode-free.
+
+Each instance runs as three composable phases per fusion group:
+``_fetch_group`` (grouped state prefetch overlapping sandbox init, SLO
+accounting), ``_execute_group`` (virtual or real-JAX compute), and
+``_offload_group`` (strategy-planned state placement + writes).
 
 Metrics per instance mirror the paper's Tables 2/3: total latency, state
 read/write time, mean state distance (hops), local availability, SLO
@@ -18,19 +32,18 @@ latency, and per-node queue depth (``repro.sim.ParallelReport``).
 """
 from __future__ import annotations
 
-import math
 import time as _time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.continuum.network import ContinuumNetwork
-from repro.continuum.storage import KVS_OP_LATENCY, TwoTierStorage
-from repro.core.baselines import RandomPlacement, StatelessPlacement
+from repro.continuum.session import MODES, StateSession
+from repro.continuum.storage import TwoTierStorage
 from repro.core.fusion import plan_fusion_groups
 from repro.core.keys import StateKey
 from repro.core.planner import WorkflowSpec, plan_workflow
-from repro.core.propagation import Databelt
 from repro.core.slo import SLO
+from repro.core.strategy import make_strategy
 from repro.serverless.workflow import Workflow, make_payload
 from repro.sim.autoscale import AutoscalePolicy, Autoscaler
 from repro.sim.kernel import SimKernel
@@ -71,24 +84,44 @@ class InstanceMetrics:
         return self.slo_violations / max(self.handoffs, 1)
 
 
+@dataclass
+class _InstanceRun:
+    """Per-instance execution state threaded through the phase methods."""
+    wf: Workflow
+    session: StateSession
+    placement: Dict[str, str]
+    metrics: InstanceMetrics
+    keys: Dict[str, StateKey] = field(default_factory=dict)
+    sizes: Dict[str, float] = field(default_factory=dict)
+    payloads: Dict[str, object] = field(default_factory=dict)
+
+
 class WorkflowEngine:
-    def __init__(self, net: ContinuumNetwork, strategy: str = "databelt",
+    def __init__(self, net: ContinuumNetwork, strategy="databelt",
                  slo: SLO = SLO(), fusion_depth: int = 1,
                  real_compute: bool = False, seed: int = 0,
-                 kvs_event_driven: bool = False,
+                 mode: str = "event",
                  region_weight: float = 0.3):
-        """``kvs_event_driven`` switches storage ops from analytic
-        ``SlotResource.request`` queueing to parked-waiter queueing (like
-        CPU slots), so autoscale capacity grows re-admit already-queued
-        KVS ops.  ``region_weight`` scales the planner's region-locality
-        term; it only takes effect on multi-region topologies (several
-        cloud nodes), so single-region runs are bit-identical to the
-        pre-region engine."""
+        """``strategy`` is a registered strategy name (``"databelt"`` /
+        ``"random"`` / ``"stateless"`` / anything added via
+        ``repro.core.strategy.register_strategy``) or an already-built
+        ``StateStrategy`` instance.  ``mode`` selects the
+        ``StateSession`` queueing style: ``"event"`` (default) parks
+        storage ops on the KVS FIFOs like CPU slots so autoscale capacity
+        grows re-admit already-queued ops; ``"analytic"`` is the
+        committed-schedule opt-out, pinned bit-identical to the
+        pre-event-driven engine.  ``region_weight`` scales the planner's
+        region-locality term; it only takes effect on multi-region
+        topologies (several cloud nodes), so single-region runs are
+        bit-identical to the pre-region engine."""
+        if mode not in MODES:
+            raise ValueError(f"unknown engine mode {mode!r}; choose one "
+                             f"of {MODES}")
         self.net = net
         self.slo = slo
         self.fusion_depth = max(fusion_depth, 1)
         self.real_compute = real_compute
-        self.kvs_event_driven = kvs_event_driven
+        self.mode = mode
         # region awareness activates only when the topology actually has
         # several cloud regions
         self.clouds = sorted(
@@ -102,17 +135,11 @@ class WorkflowEngine:
         self.resources = ResourcePool(cpu_capacity=self._cpu_slots)
         self.storage = TwoTierStorage(net.graph_at,
                                       resources=self.resources)
-        self.strategy = strategy
-        if strategy == "databelt":
-            self.placer = Databelt(net.graph_at, net.available, slo)
-        elif strategy == "random":
-            self.placer = RandomPlacement(net.graph_at, net.available,
-                                          slo, seed=seed)
-        elif strategy == "stateless":
-            self.placer = StatelessPlacement(net.graph_at, net.available,
-                                             slo)
-        else:
-            raise ValueError(strategy)
+        self.placer = make_strategy(strategy, net.graph_at, net.available,
+                                    slo, seed=seed)
+        # report label: registry name, or the class name for prebuilt
+        # instances of unregistered strategies
+        self.strategy = self.placer.name or type(self.placer).__name__
         # planner load signal: mapping-like view over the CPU resources
         self.node_busy_until = self.resources.busy_view(ResourcePool.CPU)
 
@@ -149,213 +176,184 @@ class WorkflowEngine:
         return plan.placement
 
     # ------------------------------------------------------------------
+    # instance phases: fetch -> execute -> offload, session-only
+    # ------------------------------------------------------------------
+    def _fetch_group(self, kernel: SimKernel, run: _InstanceRun, g):
+        """Grouped state fetch for one fusion group: resolve the inputs of
+        every function in the group through the session (one fused request
+        per source node when the group is fused), account per-key SLO
+        compliance on the pure network handoff, and overlap the fetch with
+        the sandbox cold start."""
+        wf, m, session = run.wf, run.metrics, run.session
+        node = g.node_id
+        need: List[StateKey] = []
+        for fname in g.function_ids:
+            preds = wf.predecessors(fname) or ["__input__"]
+            for p in preds:
+                if p in run.keys and run.keys[p].function_id not in (
+                        k.function_id for k in need):
+                    need.append(run.keys[p])
+        # per-key SLO accounting uses the *network* handoff (path latency
+        # + wire transfer, paper: "includes all data transfer"), and
+        # skips the workflow ingress (not a function pair in E)
+        for k in need:
+            if k.function_id == "__input__":
+                continue
+            m.handoffs += 1
+            if session.peek_network_latency(k, node) \
+                    > self.slo.max_handoff_s:
+                m.slo_violations += 1
+        t_fetch = kernel.now
+        if len(g.function_ids) > 1:
+            _, res = yield from session.get_fused(need, node)
+            m.storage_ops += len({k.storage_address for k in need
+                                  if k.storage_address != node} or {1})
+            m.reads += len(need)
+            m.local_reads += len(need) if res.local else 0
+            m.hops.extend([res.hops] * len(need))
+            m.read_time += res.latency
+            # one sandbox for the whole group; the grouped prefetch
+            # overlaps with sandbox init — sleep whatever the fetch did
+            # not already consume
+            elapsed = kernel.now - t_fetch
+            yield max(0.0, SANDBOX_INIT_S - elapsed, res.latency - elapsed)
+        else:
+            lat_sum, hops_list, nloc = 0.0, [], 0
+            for k in need:
+                _, r = yield from session.get(k, node)
+                lat_sum += r.latency
+                hops_list.append(r.hops)
+                nloc += 1 if r.local else 0
+                m.storage_ops += 1
+            m.reads += len(need)
+            m.local_reads += nloc
+            m.hops.extend(hops_list)
+            m.read_time += lat_sum
+            # one sandbox per function; sleep whatever the per-function
+            # reads did not already consume
+            elapsed = kernel.now - t_fetch
+            yield max(0.0, SANDBOX_INIT_S * len(g.function_ids)
+                      + lat_sum - elapsed)
+
+    def _execute_group(self, kernel: SimKernel, run: _InstanceRun, g):
+        """Execute the group's (possibly fused) functions: virtual compute
+        time from input bytes, plus the real JAX body when enabled."""
+        wf, m = run.wf, run.metrics
+        for fname in g.function_ids:
+            fn = wf.fn(fname)
+            preds = wf.predecessors(fname) or ["__input__"]
+            in_bytes = sum(run.sizes.get(p, 0.0) for p in preds)
+            ct = fn.virtual_compute_time(in_bytes)
+            if self.real_compute and fn.compute is not None:
+                merged = {}
+                for p in preds:
+                    pl = run.payloads.get(p)
+                    if isinstance(pl, dict):
+                        merged.update(pl)
+                w0 = _time.perf_counter()
+                run.payloads[fname] = fn.compute(merged) if merged else {}
+                ct += _time.perf_counter() - w0
+            m.compute_time += ct
+            yield ct
+            run.sizes[fname] = in_bytes * fn.out_ratio
+
+    def _offload_group(self, kernel: SimKernel, run: _InstanceRun, g):
+        """Strategy-planned state offload.  Fused groups persist only
+        their OUTGOING states (consumed outside the group or terminal) in
+        ONE merged request; intermediates stay in-process in the
+        middleware (paper §4.2, Fig 15: storage cost constant in fusion
+        depth)."""
+        wf, m, session = run.wf, run.metrics, run.session
+        node = g.node_id
+        in_group = set(g.function_ids)
+        outgoing = []
+        for fname in g.function_ids:
+            consumers = [j for i, j in wf.edges if i == fname]
+            if not consumers or any(c not in in_group for c in consumers):
+                outgoing.append(fname)
+        for fname in g.function_ids:
+            nxt = [j for i, j in wf.edges if i == fname]
+            dst = run.placement.get(nxt[0]) if nxt else None
+            if dst is not None:
+                self.placer.plan_state_placement(fname, node, dst,
+                                                 run.sizes[fname],
+                                                 kernel.now)
+            elif self.multi_region:
+                # terminal state: propagate toward the nearest cloud
+                # region (the key's fallback-serving shard)
+                self.placer.plan_terminal_state(fname, node,
+                                                run.sizes[fname],
+                                                kernel.now)
+            key = StateKey(wf.workflow_id, node, fname)
+            run.keys[fname] = self.placer.offload_state(fname, node,
+                                                        kernel.now, key)
+        if len(g.function_ids) > 1:
+            merged = sum(max(run.sizes[f], 1.0) for f in outgoing)
+            t_w = kernel.now
+            r = yield from session.put(run.keys[outgoing[-1]], merged,
+                                       writer=node,
+                                       global_sync=self.placer.global_sync)
+            # register the remaining outgoing keys without re-charging
+            for f in outgoing[:-1]:
+                yield from session.put(run.keys[f],
+                                       max(run.sizes[f], 1.0),
+                                       writer=node, account=False)
+            m.write_time += r.latency
+            m.storage_ops += 1
+            pending = r.latency - (kernel.now - t_w)
+            if pending > 0:
+                yield pending
+        else:
+            for fname in outgoing:
+                t_w = kernel.now
+                r = yield from session.put(
+                    run.keys[fname], max(run.sizes[fname], 1.0),
+                    writer=node, global_sync=self.placer.global_sync)
+                m.write_time += r.latency
+                m.storage_ops += 1
+                pending = r.latency - (kernel.now - t_w)
+                if pending > 0:
+                    yield pending
+
+    # ------------------------------------------------------------------
     def _instance_proc(self, kernel: SimKernel, wf: Workflow,
                        input_bytes: float, entry: str,
                        m: InstanceMetrics):
-        """One workflow instance as a discrete-event process: yields timed
-        steps (and CPU acquire/release) on the shared kernel."""
+        """One workflow instance as a discrete-event process: a fresh
+        ``StateSession`` plus the fetch/execute/offload phases per fusion
+        group, all yielding timed steps on the shared kernel."""
         t0 = kernel.now
+        session = StateSession(self.storage, kernel, mode=self.mode)
         placement = self.place_functions(wf, kernel.now, entry)
-        order = wf.order()
-        groups = plan_fusion_groups(order, placement,
+        groups = plan_fusion_groups(wf.order(), placement,
                                     max_depth=self.fusion_depth)
-        # state keys: fn -> key of its OUTPUT state
-        keys: Dict[str, StateKey] = {}
-        sizes: Dict[str, float] = {}
-        payloads: Dict[str, object] = {}
+        run = _InstanceRun(wf=wf, session=session, placement=placement,
+                           metrics=m)
 
         # the workflow input arrives at the entry node
         src_key = StateKey(wf.workflow_id, entry, "__input__")
-        if self.kvs_event_driven:
-            yield from self.storage.put_ev(src_key, input_bytes, None,
-                                           writer_node=entry,
-                                           kernel=kernel)
-        else:
-            self.storage.put(src_key, input_bytes, None, kernel.now,
-                             writer_node=entry)
-        keys["__input__"] = src_key
-        sizes["__input__"] = input_bytes
+        yield from session.put(src_key, input_bytes, writer=entry)
+        run.keys["__input__"] = src_key
+        run.sizes["__input__"] = input_bytes
         if self.real_compute:
-            payloads["__input__"] = make_payload(input_bytes)
+            run.payloads["__input__"] = make_payload(input_bytes)
 
         for g in groups:
-            node = g.node_id
-            # ---- claim a CPU slot on the node (contention model) ----
-            cpu = self.resources.cpu(node)
+            # claim a CPU slot on the node (contention model) for the
+            # whole fetch -> execute -> offload span
+            cpu = self.resources.cpu(g.node_id)
             yield ("acquire", cpu)
             kernel.log(f"{wf.workflow_id}:start:{g.group_id}")
-            # ---- fused state fetch: inputs of every fn in the group ----
-            need = []
-            for fname in g.function_ids:
-                preds = wf.predecessors(fname) or ["__input__"]
-                for p in preds:
-                    if p in keys and keys[p].function_id not in (
-                            k.function_id for k in need):
-                        need.append(keys[p])
-            fused = len(g.function_ids) > 1
-            # per-key SLO accounting uses the *network* handoff (path
-            # latency + wire transfer, paper: "includes all data transfer"),
-            # and skips the workflow ingress (not a function pair in E)
-            for k in need:
-                if k.function_id == "__input__":
-                    continue
-                m.handoffs += 1
-                if self._read_network_latency(k, node, kernel.now) \
-                        > self.slo.max_handoff_s:
-                    m.slo_violations += 1
-            if fused:
-                t_fetch = kernel.now
-                if self.kvs_event_driven:
-                    sts, res = yield from self.storage.get_fused_ev(
-                        need, node, kernel=kernel)
-                else:
-                    sts, res = self.storage.get_fused(need, node,
-                                                      kernel.now)
-                m.storage_ops += len({k.storage_address for k in need
-                                      if k.storage_address != node} or {1})
-                m.reads += len(need)
-                m.local_reads += len(need) if res.local else 0
-                m.hops.extend([res.hops] * len(need))
-                m.read_time += res.latency
-                # one sandbox for the whole group; the grouped prefetch
-                # overlaps with sandbox init
-                if self.kvs_event_driven:
-                    # the prefetch already consumed simulated time; sleep
-                    # only the sandbox-init remainder it did not overlap
-                    yield max(0.0, t_fetch + SANDBOX_INIT_S - kernel.now)
-                else:
-                    yield max(SANDBOX_INIT_S, res.latency)
-            else:
-                lat_sum, hops_list, nloc = 0.0, [], 0
-                for k in need:
-                    if self.kvs_event_driven:
-                        _, r = yield from self.storage.get_ev(
-                            k, node, kernel=kernel)
-                    else:
-                        _, r = self.storage.get(k, node, kernel.now)
-                    lat_sum += r.latency
-                    hops_list.append(r.hops)
-                    nloc += 1 if r.local else 0
-                    m.storage_ops += 1
-                m.reads += len(need)
-                m.local_reads += nloc
-                m.hops.extend(hops_list)
-                m.read_time += lat_sum
-                # one sandbox per function; in event mode the synchronous
-                # per-function reads already consumed their time above
-                if self.kvs_event_driven:
-                    yield SANDBOX_INIT_S * len(g.function_ids)
-                else:
-                    yield SANDBOX_INIT_S * len(g.function_ids) + lat_sum
-
-            # ---- execute the fused functions ----
-            for fname in g.function_ids:
-                fn = wf.fn(fname)
-                preds = wf.predecessors(fname) or ["__input__"]
-                in_bytes = sum(sizes.get(p, 0.0) for p in preds)
-                ct = fn.virtual_compute_time(in_bytes)
-                if self.real_compute and fn.compute is not None:
-                    merged = {}
-                    for p in preds:
-                        pl = payloads.get(p)
-                        if isinstance(pl, dict):
-                            merged.update(pl)
-                    w0 = _time.perf_counter()
-                    payloads[fname] = fn.compute(merged) if merged else {}
-                    ct += _time.perf_counter() - w0
-                m.compute_time += ct
-                yield ct
-                sizes[fname] = in_bytes * fn.out_ratio
-
-            # ---- state offload (per strategy) --------------------------
-            # fused groups persist only their OUTGOING states (consumed
-            # outside the group or terminal) in ONE merged request;
-            # intermediates stay in-process in the middleware (paper §4.2,
-            # Fig 15: storage cost constant in fusion depth)
-            in_group = set(g.function_ids)
-            outgoing = []
-            for fname in g.function_ids:
-                consumers = [j for i, j in wf.edges if i == fname]
-                if not consumers or any(c not in in_group
-                                        for c in consumers):
-                    outgoing.append(fname)
-            for fname in g.function_ids:
-                nxt = [j for i, j in wf.edges if i == fname]
-                dst = placement.get(nxt[0]) if nxt else None
-                if self.strategy == "databelt":
-                    if dst is not None:
-                        self.placer.plan_state_placement(fname, node, dst,
-                                                         sizes[fname],
-                                                         kernel.now)
-                    elif self.multi_region:
-                        # terminal state: propagate toward the nearest
-                        # cloud region (the key's fallback-serving shard)
-                        self.placer.plan_terminal_state(fname, node,
-                                                        sizes[fname],
-                                                        kernel.now)
-                key = StateKey(wf.workflow_id, node, fname)
-                key = self.placer.offload_state(fname, node, kernel.now,
-                                                key)
-                keys[fname] = key
-            if fused:
-                merged = sum(max(sizes[f], 1.0) for f in outgoing)
-                first = keys[outgoing[-1]]
-                if self.kvs_event_driven:
-                    r = yield from self.storage.put_ev(
-                        first, merged, None, writer_node=node,
-                        global_sync=self.strategy == "stateless",
-                        kernel=kernel)
-                else:
-                    r = self.storage.put(first, merged, None, kernel.now,
-                                         writer_node=node,
-                                         global_sync=self.strategy ==
-                                         "stateless")
-                # register the remaining outgoing keys without re-charging
-                for f in outgoing[:-1]:
-                    self.storage.put(keys[f], max(sizes[f], 1.0), None,
-                                     kernel.now, writer_node=node,
-                                     replicate_global=True, account=False)
-                m.write_time += r.latency
-                m.storage_ops += 1
-                if not self.kvs_event_driven:
-                    yield r.latency
-            else:
-                for fname in outgoing:
-                    if self.kvs_event_driven:
-                        r = yield from self.storage.put_ev(
-                            keys[fname], max(sizes[fname], 1.0), None,
-                            writer_node=node,
-                            global_sync=self.strategy == "stateless",
-                            kernel=kernel)
-                    else:
-                        r = self.storage.put(keys[fname],
-                                             max(sizes[fname], 1.0),
-                                             None, kernel.now,
-                                             writer_node=node,
-                                             global_sync=self.strategy ==
-                                             "stateless")
-                    m.write_time += r.latency
-                    m.storage_ops += 1
-                    if not self.kvs_event_driven:
-                        yield r.latency
+            yield from self._fetch_group(kernel, run, g)
+            yield from self._execute_group(kernel, run, g)
+            yield from self._offload_group(kernel, run, g)
             kernel.log(f"{wf.workflow_id}:done:{g.group_id}")
             yield ("release", cpu)
 
         m.latency = kernel.now - t0
         # resource proxies (paper Table 2 reports flat ~16% CPU / ~1.4GB)
-        m.cpu_pct = 16.0 + (1.0 if self.strategy == "databelt" else 0.0)
-        m.ram_mb = 1320 if self.strategy == "databelt" else 1423
-
-    def _read_network_latency(self, key: StateKey, node: str,
-                              t: float) -> float:
-        """Pure peek — must not consume KVS queue service time."""
-        graph = self.net.graph_at(t)
-        loc = self.storage._locate(key, node, graph)
-        if loc is None:
-            return math.inf
-        st, src = loc
-        lat, _ = self.storage._transfer(graph, src, node, st.size)
-        return 0.0 if src == node else lat
+        m.cpu_pct = self.placer.cpu_pct_proxy
+        m.ram_mb = self.placer.ram_mb_proxy
 
     # ------------------------------------------------------------------
     def run_instance(self, wf: Workflow, input_bytes: float, t0: float = 0.0,
@@ -367,11 +365,7 @@ class WorkflowEngine:
         m = InstanceMetrics()
         kernel.spawn(self._instance_proc(kernel, wf, input_bytes, entry, m),
                      label=wf.workflow_id)
-        self.storage.scheduler = kernel
-        try:
-            kernel.run()
-        finally:
-            self.storage.scheduler = None
+        kernel.run()
         return m
 
     # ------------------------------------------------------------------
@@ -399,7 +393,9 @@ class WorkflowEngine:
 
         ``entry`` may be a node id (all instances enter there) or a
         callable ``instance_index -> node id`` — a multi-region sweep
-        spreads instances over per-region entry points this way."""
+        spreads instances over per-region entry points this way.  A
+        region-aware workload generator (``repro.sim.workload.
+        RegionalDiurnal``) provides such a callable as ``entry_for``."""
         kernel = SimKernel(start=t0, record_trace=record_trace)
         scaler = Autoscaler(kernel, self.resources, autoscale).start() \
             if autoscale is not None else None
@@ -435,11 +431,7 @@ class WorkflowEngine:
             for i, at in enumerate(workload.arrivals(n, t0)):
                 kernel.spawn(wrap(i), label=f"wf{i}", at=at)
 
-        self.storage.scheduler = kernel
-        try:
-            kernel.run()
-        finally:
-            self.storage.scheduler = None
+        kernel.run()
         results.sort(key=lambda r: r[0])
         return ParallelReport.build(
             instances=[r[1] for r in results],

@@ -4,4 +4,4 @@ from repro.sim.kernel import SimKernel  # noqa: F401
 from repro.sim.metrics import ParallelReport, percentile  # noqa: F401
 from repro.sim.resources import ResourcePool, SlotResource  # noqa: F401
 from repro.sim.workload import (ClosedLoop, OpenLoopPoisson,  # noqa: F401
-                                UniformStagger)
+                                RegionalDiurnal, UniformStagger)

@@ -250,19 +250,21 @@ def _ev_read_run(grow_at=None, readers=6):
     """``readers`` concurrent event-driven reads of a ~1 s-service state
     pile onto the holder's capacity-1 KVS queue; an optional mid-run grow
     must re-admit the parked backlog (the analytic path cannot)."""
+    from repro.continuum.session import StateSession
     from repro.continuum.storage import TwoTierStorage
     from repro.core.keys import StateKey
     g = _static_pair_graph()
     kernel = SimKernel()
     pool = ResourcePool()
     st = TwoTierStorage(lambda t: g, resources=pool)
+    session = StateSession(st, kernel)          # event-driven default
     key = StateKey("w", "h", "f")
     st.put(key, 40e6, t=0.0, writer_node="h", replicate_global=False,
            account=False)
     done = []
 
     def reader(i):
-        _, r = yield from st.get_ev(key, "r", kernel=kernel)
+        _, r = yield from session.get(key, "r")
         done.append((i, kernel.now))
 
     for i in range(readers):
@@ -289,9 +291,9 @@ def test_event_driven_kvs_grow_readmits_parked_backlog():
 def test_event_driven_engine_replay_deterministic(net_maker):
     pol = AutoscalePolicy(p95_slo_s=10.0)
     a = _closed_loop_run(net_maker, autoscale=pol, record_trace=True,
-                         kvs_event_driven=True)
+                         mode="event")
     b = _closed_loop_run(net_maker, autoscale=pol, record_trace=True,
-                         kvs_event_driven=True)
+                         mode="event")
     assert a.trace == b.trace and len(a.trace) > 0
     assert a.latencies == b.latencies
     assert all(m.latency > 0 for m in a)

@@ -162,6 +162,70 @@ def test_global_locate_home_first_then_nearest_replica():
     assert (val, serving) == ("B", other)         # cross-region fallback
 
 
+def _key_homed_on(st, clouds, target, address="edge0"):
+    """First flood-style key whose rendezvous home is ``target``."""
+    for i in range(64):
+        key = StateKey(f"w{i}", address, "f")
+        if st.global_tier.home(key.encoded(), clouds) == target:
+            return key
+    raise AssertionError(f"no key homed on {target} in 64 tries")
+
+
+def test_put_fans_out_to_home_and_nearest_shards():
+    """k=2 replica fan-out: a write whose home shard differs from the
+    writer-nearest shard lands in BOTH; with home == nearest it degrades
+    to a single replica (and a single region to the original design)."""
+    net = multiregion_network(4)
+    st = TwoTierStorage(net.graph_at)
+    clouds = [f"cloud{i}" for i in range(4)]
+    # writer edge0 -> nearest cloud0; pick a key homed elsewhere
+    key = _key_homed_on(st, clouds, "cloud2")
+    st.put(key, 1e6, t=0.0, writer_node="edge0")
+    assert set(st.global_tier.locate(key.encoded())) == \
+        {"cloud0", "cloud2"}
+    # home == nearest collapses to k=1
+    key2 = _key_homed_on(st, clouds, "cloud0")
+    st.put(key2, 1e6, t=0.0, writer_node="edge0")
+    assert st.global_tier.locate(key2.encoded()) == ["cloud0"]
+
+
+def test_home_shard_miss_read_repairs_and_stops_repaying_wan():
+    """ROADMAP open item: a fallback-served read heals the home shard, so
+    the next read of the same key hits home instead of re-paying the
+    cross-region WAN leg."""
+    net = multiregion_network(2)
+    st = TwoTierStorage(net.graph_at)
+    clouds = ["cloud0", "cloud1"]
+    key = _key_homed_on(st, clouds, "cloud1")   # home in region 1
+    enc = key.encoded()
+    st.put(key, 1e6, t=0.0, writer_node="edge0")
+    st.local.clear()                    # local copies vanish
+    del st.global_tier.shards["cloud1"][enc]    # home shard lost the key
+    # reader in the home's own region: forced cross-region on first read
+    s1, r1 = st.get(key, "edge1", 0.0)
+    assert s1 is not None and r1.from_global
+    assert st.global_tier.has(enc, "cloud1")    # read-repair healed home
+    s2, r2 = st.get(key, "edge1", 1.0)
+    assert s2 is not None and r2.from_global
+    # the healed read is served region-locally: no WAN on the wire
+    assert r2.network_latency < r1.network_latency
+    assert r2.hops < r1.hops
+
+
+def test_peek_never_read_repairs():
+    """The engine's SLO peek is pure: locating a key must not heal."""
+    net = multiregion_network(2)
+    st = TwoTierStorage(net.graph_at)
+    key = _key_homed_on(st, ["cloud0", "cloud1"], "cloud1")
+    enc = key.encoded()
+    st.put(key, 1e6, t=0.0, writer_node="edge0")
+    st.local.clear()
+    del st.global_tier.shards["cloud1"][enc]
+    g = net.graph_at(0.0)
+    assert st._locate(key, "edge1", g) is not None
+    assert not st.global_tier.has(enc, "cloud1")   # still un-healed
+
+
 def test_global_tier_rewrite_is_last_write_wins_across_shards():
     """A rewrite landing on a different region's shard (the writer moved)
     must evict the stale copy everywhere — home-first reads may never
