@@ -4,22 +4,21 @@ Paper: Databelt 0.21 hops / 79% local; Random 2.16 / 12%; Stateless 4 / ~0%.
 """
 from __future__ import annotations
 
-from benchmarks.common import REPS, emit, make_net, mean
-from repro.serverless.engine import WorkflowEngine
-from repro.serverless.workflow import flood_workflow
+from benchmarks.common import REPS, emit
+from repro.scenario import Scenario, WorkloadSpec
+
+BASE = Scenario(workload=WorkloadSpec(kind="sequential", spacing=90.0),
+                n=REPS * 2, input_bytes=10e6)
 
 
 def run():
-    net = make_net()
     out = {}
-    for strat in ("databelt", "random", "stateless"):
-        eng = WorkflowEngine(net, strategy=strat)
-        ms = [eng.run_instance(flood_workflow(f"a{strat}{i}"), 10e6,
-                               t0=i * 90.0) for i in range(REPS * 2)]
-        out[strat] = {
-            "mean_hops": round(mean(m.mean_hops for m in ms), 2),
+    for sc in BASE.sweep(strategy=("databelt", "random", "stateless")):
+        r = sc.run()
+        out[sc.strategy] = {
+            "mean_hops": round(r.mean_of(lambda m: m.mean_hops), 2),
             "local_availability_pct":
-                round(100 * mean(m.local_availability for m in ms), 1),
+                round(100 * r.mean_of(lambda m: m.local_availability), 1),
         }
     derived = {
         "databelt_hops": out["databelt"]["mean_hops"],

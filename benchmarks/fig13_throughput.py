@@ -1,40 +1,33 @@
 """Paper Fig 13: throughput + tail latency vs concurrent instances.
 
 Sweeps 1 -> 256 concurrent workflow instances on the discrete-event kernel
-for all three state strategies.  Fresh network + engine per point so
-resource queues start empty.  Emits a JSON sweep with throughput (rps),
+for all three state strategies — one ``Scenario.sweep`` over the
+(concurrency x strategy) grid; each cell builds a fresh network + engine
+so resource queues start empty.  Emits a JSON sweep with throughput (rps),
 p50/p95/p99 latency, and the cloud-KVS max queue depth — the Stateless
 bottleneck the paper's scalability section measures.
 """
 from __future__ import annotations
 
-from benchmarks.common import FULL, emit, make_net
-from repro.serverless.engine import WorkflowEngine
-from repro.serverless.workflow import flood_workflow
+from benchmarks.common import FULL, emit
+from repro.scenario import Scenario, WorkloadSpec
 
 CONCURRENCY = [1, 2, 4, 8, 16, 32, 64, 128, 256] if FULL \
     else [1, 4, 16, 64]
 STRATEGIES = ("databelt", "random", "stateless")
 INPUT_BYTES = 2e6
 
+BASE = Scenario(workload=WorkloadSpec(kind="stagger", stagger=0.05),
+                input_bytes=INPUT_BYTES)
+
 
 def run():
     rows = []
-    for n in CONCURRENCY:
-        for strat in STRATEGIES:
-            eng = WorkflowEngine(make_net(), strategy=strat)
-            rep = eng.run_parallel(lambda wid: flood_workflow(wid), n,
-                                   INPUT_BYTES, stagger=0.05)
-            rows.append({
-                "parallel": n, "system": strat,
-                "throughput_rps": round(rep.throughput_rps, 4),
-                "p50_s": round(rep.p50, 3),
-                "p95_s": round(rep.p95, 3),
-                "p99_s": round(rep.p99, 3),
-                "mean_latency_s": round(rep.mean_latency, 3),
-                "cloud_kvs_max_depth": rep.max_kvs_depth("cloud0"),
-                "events": rep.events_processed,
-            })
+    for sc in BASE.sweep(n=CONCURRENCY, strategy=STRATEGIES):
+        r = sc.run()
+        rows.append(r.row(
+            parallel=sc.n,
+            cloud_kvs_max_depth=r.max_kvs_depth("cloud0")))
     nmax = CONCURRENCY[-1]
     by = {(r["system"], r["parallel"]): r for r in rows}
     d, s = by[("databelt", nmax)], by[("stateless", nmax)]

@@ -7,21 +7,26 @@ autoscaler attached and shows the knee moving right: at the top of the
 sweep the autoscaled stateless baseline sustains measurably higher
 throughput and lower p95 than fixed capacity.
 
-Fresh network + engine per cell so resource queues start empty; every run
-is a deterministic kernel replay.  ``BENCH_FULL=1`` widens the sweep.
+Each cell is one ``Scenario`` (fresh network + engine, deterministic
+kernel replay).  The derived output includes the Cosmos-style spend audit
+(``AutoscaleReport.cost``): $-per-slot-second integration of the
+provisioned capacity timeline, autoscaled vs the fixed baseline.
+``BENCH_FULL=1`` widens the sweep.
 """
 from __future__ import annotations
 
-from benchmarks.common import FULL, emit, make_net
-from repro.serverless.engine import WorkflowEngine
-from repro.serverless.workflow import flood_workflow
-from repro.sim import AutoscalePolicy, ClosedLoop
+from benchmarks.common import FULL, emit
+from repro.scenario import AutoscalePolicy, Scenario, WorkloadSpec
+from repro.sim import AutoscaleReport
 
 CLIENTS = [4, 8, 16, 32, 64, 128, 256] if FULL else [16, 64, 256]
 INSTANCES_PER_CLIENT = 2
 STRATEGIES = ("databelt", "random", "stateless")
 INPUT_BYTES = 2e6
 P95_SLO_S = 10.0
+# per-slot-second rates for the spend audit (~$0.17/core-hour cloud
+# list-price class; KVS service slots run cheaper)
+COST_RATES = {"cpu": 4.8e-5, "kvs": 1.2e-5}
 
 
 def _policy() -> AutoscalePolicy:
@@ -30,29 +35,30 @@ def _policy() -> AutoscalePolicy:
 
 
 def run_cell(clients: int, strat: str, autoscaled: bool) -> dict:
-    n = clients * INSTANCES_PER_CLIENT
-    eng = WorkflowEngine(make_net(), strategy=strat)
-    rep = eng.run_parallel(lambda wid: flood_workflow(wid), n, INPUT_BYTES,
-                           workload=ClosedLoop(clients=clients),
-                           autoscale=_policy() if autoscaled else None)
-    row = {
-        "clients": clients, "n": n, "system": strat,
-        "mode": "autoscaled" if autoscaled else "fixed",
-        "throughput_rps": round(rep.throughput_rps, 4),
-        "p50_s": round(rep.p50, 3),
-        "p95_s": round(rep.p95, 3),
-        "p99_s": round(rep.p99, 3),
-        "mean_latency_s": round(rep.mean_latency, 3),
-        "cloud_kvs_max_depth": rep.max_kvs_depth("cloud0"),
-        "events": rep.events_processed,
-    }
-    if rep.autoscale is not None:
+    sc = Scenario(
+        workload=WorkloadSpec(kind="closed_loop", clients=clients),
+        strategy=strat, n=clients * INSTANCES_PER_CLIENT,
+        input_bytes=INPUT_BYTES,
+        autoscale=_policy() if autoscaled else None)
+    r = sc.run()
+    row = r.row(clients=clients, n=sc.n,
+                mode="autoscaled" if autoscaled else "fixed",
+                cloud_kvs_max_depth=r.max_kvs_depth("cloud0"))
+    if r.autoscale is not None:
         row["autoscale"] = {
-            "scale_ups": rep.autoscale.scale_ups,
-            "scale_downs": rep.autoscale.scale_downs,
+            "scale_ups": r.autoscale.scale_ups,
+            "scale_downs": r.autoscale.scale_downs,
             "cloud_kvs_capacity":
-                rep.autoscale.final_capacities.get("kvs:cloud0", 1),
-            "actions": len(rep.autoscale.actions),
+                r.autoscale.final_capacities.get("kvs:cloud0", 1),
+            "actions": len(r.autoscale.actions),
+            "cost_usd": round(r.autoscale.cost(COST_RATES,
+                                               r.rep.makespan), 4),
+            # what the same run would have spent had the provisioned
+            # capacity stayed fixed at the initial (hardware) level
+            "fixed_cost_usd": round(
+                AutoscaleReport(
+                    initial_capacities=r.autoscale.initial_capacities)
+                .cost(COST_RATES, r.rep.makespan), 4),
         }
     return row
 
@@ -97,9 +103,14 @@ def run():
             100 * (1 - sa["p95_s"] / sf["p95_s"]), 1),
         "autoscaled_cloud_kvs_capacity":
             sa.get("autoscale", {}).get("cloud_kvs_capacity", 1),
+        "autoscale_cost_usd":
+            sa.get("autoscale", {}).get("cost_usd", 0.0),
+        "autoscale_fixed_cost_usd":
+            sa.get("autoscale", {}).get("fixed_cost_usd", 0.0),
     }
     emit("fig14_autoscale", sa["p95_s"] * 1e6, derived,
          {"rows": rows, "p95_slo_s": P95_SLO_S,
+          "cost_rates_usd_per_slot_s": COST_RATES,
           "policy": "scale-up x2 on queue>2xcap or p95 breach; "
                     "scale-down 25% after 4 calm intervals"})
     return rows

@@ -1,13 +1,13 @@
 """Fig 17 (extension): multi-region sweep — 1 vs 2 vs 4 regions.
 
-Sweeps the region-sharded global tier (``repro.continuum.regions``) under
-``run_parallel`` for all three state strategies.  Each configuration uses
-the layered two-shell constellation; workflow arrivals come from the
-region-aware ``RegionalDiurnal`` generator — every region runs its own
-Poisson process with a diurnal phase offset (follow-the-sun), and each
-instance enters at the drone site of the region that generated it — the
-single-region point is the original single-``cloud0`` deployment the
-paper evaluates.
+Sweeps the region-sharded global tier (``repro.continuum.regions``) for
+all three state strategies as one ``Scenario`` grid
+(``network__regions x strategy``).  Each configuration uses the layered
+two-shell constellation; workflow arrivals come from the region-aware
+``RegionalDiurnal`` generator — every region runs its own Poisson process
+with a diurnal phase offset (follow-the-sun), and each instance enters at
+the drone site of the region that generated it — the single-region point
+is the original single-``cloud0`` deployment the paper evaluates.
 
 Acceptance (wired into CI at smoke scale):
 * the region-sharded global tier beats the single-``cloud0`` configuration
@@ -20,10 +20,7 @@ Acceptance (wired into CI at smoke scale):
 from __future__ import annotations
 
 from benchmarks.common import FULL, emit
-from repro.continuum.regions import multiregion_network
-from repro.serverless.engine import WorkflowEngine
-from repro.serverless.workflow import flood_workflow
-from repro.sim.workload import RegionalDiurnal
+from repro.scenario import NetworkSpec, Scenario, WorkloadSpec
 
 REGION_COUNTS = (1, 2, 4)
 STRATEGIES = ("databelt", "random", "stateless")
@@ -32,36 +29,25 @@ INPUT_BYTES = 2e6
 AGGREGATE_RPS = 20.0     # split evenly across regions: load-comparable
                          # between the 1- and N-region configurations
 
-
-def _run(n_regions: int, strat: str, record_trace: bool = False):
-    eng = WorkflowEngine(multiregion_network(n_regions), strategy=strat)
-    workload = RegionalDiurnal(regions=n_regions, rate=AGGREGATE_RPS,
-                               peak_to_trough=2.0, seed=17)
-    return eng.run_parallel(
-        lambda wid: flood_workflow(wid), N, INPUT_BYTES,
-        workload=workload, entry=workload.entry_for,
-        record_trace=record_trace)
+BASE = Scenario(
+    network=NetworkSpec(regions=1),
+    workload=WorkloadSpec(kind="regional_diurnal", rate=AGGREGATE_RPS,
+                          peak_to_trough=2.0, seed=17),
+    n=N, input_bytes=INPUT_BYTES)
 
 
 def run():
     rows = []
-    for nr in REGION_COUNTS:
-        for strat in STRATEGIES:
-            rep = _run(nr, strat)
-            depth = max(rep.max_kvs_depth(f"cloud{i}") for i in range(nr))
-            rows.append({
-                "regions": nr, "system": strat, "parallel": N,
-                "throughput_rps": round(rep.throughput_rps, 4),
-                "p50_s": round(rep.p50, 3),
-                "p95_s": round(rep.p95, 3),
-                "p99_s": round(rep.p99, 3),
-                "mean_latency_s": round(rep.mean_latency, 3),
-                "max_cloud_kvs_depth": depth,
-                "events": rep.events_processed,
-            })
+    for sc in BASE.sweep(network__regions=REGION_COUNTS,
+                         strategy=STRATEGIES):
+        rep = sc.run()
+        nr = sc.network.regions
+        depth = max(rep.max_kvs_depth(f"cloud{i}") for i in range(nr))
+        rows.append(rep.row(regions=nr, parallel=N,
+                            max_cloud_kvs_depth=depth))
     # single-region deterministic replay must stay bit-identical
-    a = _run(1, "stateless", record_trace=True)
-    b = _run(1, "stateless", record_trace=True)
+    a = BASE.replace(strategy="stateless", record_trace=True).run()
+    b = BASE.replace(strategy="stateless", record_trace=True).run()
     replay_ok = a.trace == b.trace and len(a.trace) > 0 \
         and a.latencies == b.latencies
 

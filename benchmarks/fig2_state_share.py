@@ -3,23 +3,23 @@ experiment — stateless KVS configuration, varying input sizes).
 Paper: I/O contributes up to ~40% of total workflow latency."""
 from __future__ import annotations
 
-from benchmarks.common import emit, make_net, mean
-from repro.serverless.engine import WorkflowEngine
-from repro.serverless.workflow import flood_workflow
+from benchmarks.common import emit
+from repro.scenario import Scenario, WorkloadSpec
 
 SIZES_MB = [10, 20, 30, 40, 50]
 
+BASE = Scenario(workload=WorkloadSpec(kind="sequential", spacing=90.0),
+                strategy="stateless", n=3)
+
 
 def run():
-    net = make_net()
     rows = []
-    for size in SIZES_MB:
-        eng = WorkflowEngine(net, strategy="stateless")
-        ms = [eng.run_instance(flood_workflow(f"s{size}_{i}"), size * 1e6,
-                               t0=i * 90.0) for i in range(3)]
-        io = mean(m.read_time + m.write_time for m in ms)
-        tot = mean(m.latency for m in ms)
-        rows.append({"size_mb": size, "io_s": round(io, 3),
+    for sc in BASE.sweep(input_bytes=[s * 1e6 for s in SIZES_MB]):
+        r = sc.run()
+        io = r.mean_of(lambda m: m.read_time + m.write_time)
+        tot = r.mean_of(lambda m: m.latency)
+        rows.append({"size_mb": int(sc.input_bytes / 1e6),
+                     "io_s": round(io, 3),
                      "total_s": round(tot, 3),
                      "io_share_pct": round(100 * io / tot, 1)})
     derived = {"max_io_share_pct": max(r["io_share_pct"] for r in rows)}

@@ -1,22 +1,39 @@
-"""Benchmark entry point: one function per paper table/figure.
+"""Benchmark entry point: paper figures/tables + named scenario specs.
 
-``PYTHONPATH=src python -m benchmarks.run``
+    PYTHONPATH=src python -m benchmarks.run                  # all figures
+    PYTHONPATH=src python -m benchmarks.run --only fig13_throughput
+    PYTHONPATH=src python -m benchmarks.run --list
+    PYTHONPATH=src python -m benchmarks.run --scenario smoke-databelt
+
+Two registries:
+
+* **figures** — one function per paper table/figure (the classic sweep
+  scripts, themselves built on ``repro.scenario``).
+* **scenarios** — named declarative ``Scenario`` specs as plain dicts.
+  ``--scenario NAME`` round-trips the spec through
+  ``Scenario.from_dict(to_dict(...))`` before running (serialization is
+  part of the contract — CI's scenario-smoke step runs one per strategy)
+  and prints the standard report row.
+
 Prints ``name,us_per_call,derived`` CSV lines; JSON records land in
 ``experiments/bench/``.  ``BENCH_FULL=1`` runs paper-size repetitions.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
 
-def main() -> None:
+def _figures():
     from benchmarks import (bench_kernels, bench_transfer, fig2_state_share,
                             fig10_availability, fig13_throughput,
                             fig14_autoscale, fig16_service_scale,
+                            fig17_multiregion, fig18_churn,
                             table2_propagation, table3_scalability,
                             table4_fusion)
-    benches = [
+    return [
         ("fig2_state_share", fig2_state_share.run),
         ("table2_propagation", table2_propagation.run),
         ("fig10_availability", fig10_availability.run),
@@ -25,9 +42,94 @@ def main() -> None:
         ("fig14_autoscale", fig14_autoscale.run),
         ("table4_fusion", table4_fusion.run),
         ("fig16_service_scale", fig16_service_scale.run),
+        ("fig17_multiregion", fig17_multiregion.run),
+        ("fig18_churn", fig18_churn.run),
         ("bench_transfer", bench_transfer.run),
         ("bench_kernels", bench_kernels.run),
     ]
+
+
+# ---------------------------------------------------------------------------
+# named scenario registry: declarative specs, run via the Scenario API
+# ---------------------------------------------------------------------------
+def _scenarios() -> dict:
+    churn = {
+        "events": [{"t": 3.0, "duration_s": 5.0, "kind": "drain",
+                    "node": "cloud0", "link": []}]}
+    specs = {}
+    for strat in ("databelt", "random", "stateless"):
+        specs[f"smoke-{strat}"] = {
+            "strategy": strat, "n": 16, "input_bytes": 2e6,
+            "workload": {"kind": "stagger", "stagger": 0.05},
+        }
+    specs["smoke-multiregion"] = {
+        "strategy": "stateless", "n": 24, "input_bytes": 2e6,
+        "network": {"regions": 2},
+        "workload": {"kind": "regional_diurnal", "rate": 8.0,
+                     "seed": 11},
+    }
+    specs["smoke-churn"] = {
+        "strategy": "databelt", "n": 24, "input_bytes": 2e6,
+        "network": {"regions": 2},
+        "workload": {"kind": "regional_diurnal", "rate": 8.0,
+                     "seed": 11},
+        "faults": churn,
+    }
+    return specs
+
+
+def run_scenario(name: str) -> dict:
+    """Resolve ``name``, round-trip the spec through the Scenario
+    serialization contract, run it, and print the standard row."""
+    from repro.scenario import Scenario
+    specs = _scenarios()
+    if name not in specs:
+        raise SystemExit(f"unknown scenario {name!r}; known: "
+                         f"{', '.join(sorted(specs))}")
+    sc = Scenario.from_dict(specs[name])
+    rt = Scenario.from_dict(json.loads(json.dumps(sc.to_dict())))
+    assert rt.to_dict() == sc.to_dict(), \
+        f"scenario {name!r} does not round-trip through to_dict/from_dict"
+    row = rt.run().row(scenario=name)
+    print(json.dumps(row))
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true",
+                    help="list figure benchmarks and named scenarios")
+    ap.add_argument("--only", action="append", default=[],
+                    help="run only the named figure benchmark(s)")
+    ap.add_argument("--scenario", action="append", default=[],
+                    help="run a named Scenario spec (round-tripped "
+                         "through to_dict/from_dict)")
+    args = ap.parse_args()
+
+    if args.list:
+        print("figures:")
+        for name, _ in _figures():
+            print(f"  {name}")
+        print("scenarios:")
+        for name in sorted(_scenarios()):
+            print(f"  {name}")
+        return
+
+    if args.scenario:
+        for name in args.scenario:
+            run_scenario(name)
+        if not args.only:
+            return
+
+    benches = _figures()
+    if args.only:
+        known = dict(benches)
+        for name in args.only:
+            if name not in known:
+                raise SystemExit(f"unknown benchmark {name!r}; known: "
+                                 f"{', '.join(known)}")
+        benches = [(n, f) for n, f in benches if n in args.only]
+
     print("name,us_per_call,derived")
     failed = []
     for name, fn in benches:

@@ -1,13 +1,14 @@
 """Paper Table 2 / Figs 9, 11, 12: state propagation performance.
 
 Workflow latency / state read / state write / RPS / SLO violations /
-CPU / RAM for Databelt vs Random vs Stateless at 10..50 MB input sizes.
+CPU / RAM for Databelt vs Random vs Stateless at 10..50 MB input sizes —
+one ``Scenario`` grid over (size x strategy) in the paper's sequential
+regime (one instance every 120 s).
 """
 from __future__ import annotations
 
-from benchmarks.common import REPS, emit, make_net, mean
-from repro.serverless.engine import WorkflowEngine
-from repro.serverless.workflow import flood_workflow
+from benchmarks.common import REPS, emit
+from repro.scenario import Scenario, WorkloadSpec
 
 SIZES_MB = [10, 20, 30, 40, 50]
 PAPER = {  # (latency_s, read_s, write_s, slo_viol_pct) at each size
@@ -16,29 +17,29 @@ PAPER = {  # (latency_s, read_s, write_s, slo_viol_pct) at each size
     "stateless": {10: (12.47, 2.43, 2.07, 100), 50: (43.29, 9.16, 7.10, 40)},
 }
 
+BASE = Scenario(workload=WorkloadSpec(kind="sequential", spacing=120.0),
+                n=REPS)
+
 
 def run(real_compute: bool = False):
-    net = make_net()
     rows = []
-    for size in SIZES_MB:
-        for strat in ("databelt", "random", "stateless"):
-            eng = WorkflowEngine(net, strategy=strat,
-                                 real_compute=real_compute)
-            ms = [eng.run_instance(flood_workflow(f"{strat}{size}_{i}"),
-                                   size * 1e6, t0=i * 120.0)
-                  for i in range(REPS)]
-            row = {
-                "size_mb": size, "system": strat,
-                "latency_s": round(mean(m.latency for m in ms), 3),
-                "read_s": round(mean(m.read_time for m in ms), 3),
-                "write_s": round(mean(m.write_time for m in ms), 3),
-                "rps": round(1.0 / mean(m.latency for m in ms), 4),
-                "slo_viol_pct": round(100 * mean(
-                    m.slo_violation_rate for m in ms), 1),
-                "cpu_pct": round(mean(m.cpu_pct for m in ms), 1),
-                "ram_mb": round(mean(m.ram_mb for m in ms), 0),
-            }
-            rows.append(row)
+    grid = BASE.replace(real_compute=real_compute).sweep(
+        input_bytes=[s * 1e6 for s in SIZES_MB],
+        strategy=("databelt", "random", "stateless"))
+    for sc in grid:
+        r = sc.run()
+        lat = r.mean_of(lambda m: m.latency)
+        rows.append({
+            "size_mb": int(sc.input_bytes / 1e6), "system": sc.strategy,
+            "latency_s": round(lat, 3),
+            "read_s": round(r.mean_of(lambda m: m.read_time), 3),
+            "write_s": round(r.mean_of(lambda m: m.write_time), 3),
+            "rps": round(1.0 / lat, 4),
+            "slo_viol_pct": round(
+                100 * r.mean_of(lambda m: m.slo_violation_rate), 1),
+            "cpu_pct": round(r.mean_of(lambda m: m.cpu_pct), 1),
+            "ram_mb": round(r.mean_of(lambda m: m.ram_mb), 0),
+        })
     # headline derived metrics (paper: up to 66% latency cut vs baselines,
     # +50% throughput)
     d50 = next(r for r in rows if r["size_mb"] == 50

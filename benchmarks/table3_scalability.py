@@ -1,33 +1,30 @@
 """Paper Table 3 / Fig 13: scalability under parallel workflow executions.
 
-Fixed 2MB state, fan-out 5..50 parallel instances, Databelt vs Stateless.
+Fixed 2MB state, fan-out 5..50 parallel instances, Databelt vs Stateless —
+a ``Scenario`` grid over (parallelism x strategy).
 Paper: Databelt cuts latency ~47% and lifts throughput up to 91%.
 """
 from __future__ import annotations
 
-import os
-
-from benchmarks.common import FULL, emit, make_net, mean
-from repro.serverless.engine import WorkflowEngine
-from repro.serverless.workflow import flood_workflow
+from benchmarks.common import FULL, emit
+from repro.scenario import Scenario, WorkloadSpec
 
 PARALLEL = [5, 10, 15, 20, 25, 30, 35, 40, 45, 50] if FULL \
     else [5, 10, 20, 50]
 
+BASE = Scenario(workload=WorkloadSpec(kind="stagger", stagger=0.05),
+                input_bytes=2e6)
+
 
 def run():
     rows = []
-    for n in PARALLEL:
-        for strat in ("databelt", "stateless"):
-            net = make_net()
-            eng = WorkflowEngine(net, strategy=strat)
-            rep = eng.run_parallel(
-                lambda wid: flood_workflow(wid), n, 2e6, stagger=0.05)
-            rows.append({
-                "parallel": n, "system": strat,
-                "latency_s": round(rep.makespan, 2),
-                "rps": round(rep.throughput_rps, 4),
-            })
+    for sc in BASE.sweep(n=PARALLEL, strategy=("databelt", "stateless")):
+        r = sc.run()
+        rows.append({
+            "parallel": sc.n, "system": sc.strategy,
+            "latency_s": round(r.rep.makespan, 2),
+            "rps": round(r.throughput_rps, 4),
+        })
     d = {r["parallel"]: r for r in rows if r["system"] == "databelt"}
     s = {r["parallel"]: r for r in rows if r["system"] == "stateless"}
     nmax = PARALLEL[-1]

@@ -3,27 +3,19 @@
 A depth-N chain shares one sandbox; Databelt fuses the N state fetches into
 one grouped op (constant storage ops) while the Baseline issues per-function
 reads/writes (linear).  Stateless = remote storage; Stateful = local.
+Each cell is a ``Scenario`` over the ``chain:<depth>`` workflow with the
+fusion depth as the only variable.
 Paper: ~20% (stateless) / ~19% (stateful) latency cut; storage ops constant.
 """
 from __future__ import annotations
 
-from repro.core.slo import FunctionDemand
-
-from benchmarks.common import emit, make_net, mean
-from repro.serverless.engine import WorkflowEngine
-from repro.serverless.workflow import ServerlessFunction, Workflow
+from benchmarks.common import emit
+from repro.scenario import Scenario, WorkloadSpec
 
 DEPTHS = [1, 2, 3, 4, 5]
 
-
-def chain_workflow(wid: str, depth: int) -> Workflow:
-    fns = [ServerlessFunction(
-        f"f{i}", None, out_ratio=1.0,
-        demand=FunctionDemand(f"f{i}", cpu=0.25, mem=64e6, power=2.0,
-                              t_exc=1.0),
-        compute_s_per_mb=0.05) for i in range(depth)]
-    edges = [(f"f{i}", f"f{i+1}") for i in range(depth - 1)]
-    return Workflow(wid, fns, edges)
+BASE = Scenario(workload=WorkloadSpec(kind="sequential", spacing=60.0),
+                n=3)
 
 
 def run():
@@ -32,18 +24,18 @@ def run():
         strat = "stateless" if state_mode == "stateless" else "databelt"
         for depth in DEPTHS:
             for system, fd in (("databelt", depth), ("baseline", 1)):
-                net = make_net()
-                eng = WorkflowEngine(net, strategy=strat, fusion_depth=fd)
-                ms = [eng.run_instance(chain_workflow(f"c{i}", depth),
-                                       10e6 * depth, t0=i * 60.0)
-                      for i in range(3)]
+                sc = BASE.replace(strategy=strat,
+                                  workflow=f"chain:{depth}",
+                                  fusion_depth=fd,
+                                  input_bytes=10e6 * depth)
+                r = sc.run()
                 rows.append({
                     "depth": depth, "state": state_mode, "system": system,
-                    "function_s": round(mean(m.latency for m in ms), 3),
-                    "storage_s": round(mean(
-                        m.read_time + m.write_time for m in ms), 3),
-                    "storage_ops": round(mean(
-                        m.storage_ops for m in ms), 1),
+                    "function_s": round(r.mean_of(lambda m: m.latency), 3),
+                    "storage_s": round(r.mean_of(
+                        lambda m: m.read_time + m.write_time), 3),
+                    "storage_ops": round(r.mean_of(
+                        lambda m: m.storage_ops), 1),
                 })
     def pick(state, system, depth):
         return next(r for r in rows if r["state"] == state and

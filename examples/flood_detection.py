@@ -1,7 +1,8 @@
 """The paper's illustrative scenario (Fig. 3/4) end to end: drones stream
 video to LEO satellites; Ingest filters blurry frames, Detect runs a person
 -detection DNN, Map fuses EO-satellite SAR with a flood CNN, Alarm notifies
-— all real JAX compute, with Databelt state propagation and function fusion.
+— all real JAX compute, with Databelt state propagation and function fusion,
+declared as one ``Scenario``.
 
     PYTHONPATH=src python examples/flood_detection.py
 """
@@ -10,24 +11,24 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.continuum.network import ContinuumNetwork
-from repro.continuum.orbits import Constellation
-from repro.serverless.engine import WorkflowEngine
+from repro.scenario import Scenario, WorkloadSpec
 from repro.serverless.workflow import flood_workflow
 
 
 def main():
-    net = ContinuumNetwork(Constellation(n_planes=8, sats_per_plane=8))
-    eng = WorkflowEngine(net, strategy="databelt", fusion_depth=2,
-                         real_compute=True)
+    sc = Scenario(workload=WorkloadSpec(kind="sequential"),
+                  strategy="databelt", n=1, input_bytes=10e6,
+                  fusion_depth=2, real_compute=True)
 
-    wf = flood_workflow("flood-mission-0")
-    placement = eng.place_functions(wf, 0.0)
+    # peek at the control plane before running: the same engine the
+    # scenario drives, built from the same spec
+    eng = sc.build_engine()
+    placement = eng.place_functions(flood_workflow("flood-mission-0"), 0.0)
     print("function placement (HyperDrive planner):")
     for f, n in placement.items():
         print(f"  {f:<8s} -> {n}")
 
-    m = eng.run_instance(wf, 10e6, t0=0.0)
+    m = sc.run().instances[0]
     print(f"\nworkflow latency   {m.latency:6.2f}s "
           f"(compute {m.compute_time:.2f}s, state read {m.read_time:.2f}s, "
           f"write {m.write_time:.2f}s)")

@@ -1,4 +1,5 @@
-"""Quickstart: Databelt state propagation on the 3D continuum in ~30 lines.
+"""Quickstart: Databelt state propagation on the 3D continuum — one
+declarative ``Scenario`` per strategy, no hand-wiring.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,30 +8,26 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.continuum.network import ContinuumNetwork
-from repro.continuum.orbits import Constellation
-from repro.serverless.engine import WorkflowEngine
-from repro.serverless.workflow import flood_workflow
+from repro.scenario import Scenario, WorkloadSpec
 
 
 def main():
-    # a 64-satellite Walker shell + cloud/edge/drone/EO sites
-    net = ContinuumNetwork(Constellation(n_planes=8, sats_per_plane=8))
+    # a 64-satellite Walker shell + cloud/edge/drone/EO sites (the
+    # NetworkSpec default), 5 sequential 10 MB workflow instances
+    base = Scenario(workload=WorkloadSpec(kind="sequential", spacing=90.0),
+                    n=5, input_bytes=10e6)
 
     print(f"{'system':<10s} {'latency':>8s} {'read':>7s} {'write':>7s} "
           f"{'local%':>7s} {'hops':>5s} {'SLO viol':>8s}")
-    for strategy in ("databelt", "random", "stateless"):
-        eng = WorkflowEngine(net, strategy=strategy)
-        ms = [eng.run_instance(flood_workflow(f"{strategy}-{i}"), 10e6,
-                               t0=i * 90.0) for i in range(5)]
-        n = len(ms)
-        print(f"{strategy:<10s} "
-              f"{sum(m.latency for m in ms)/n:7.2f}s "
-              f"{sum(m.read_time for m in ms)/n:6.2f}s "
-              f"{sum(m.write_time for m in ms)/n:6.2f}s "
-              f"{100*sum(m.local_availability for m in ms)/n:6.1f}% "
-              f"{sum(m.mean_hops for m in ms)/n:5.2f} "
-              f"{100*sum(m.slo_violation_rate for m in ms)/n:7.1f}%")
+    for sc in base.sweep(strategy=("databelt", "random", "stateless")):
+        r = sc.run()
+        print(f"{r.system:<10s} "
+              f"{r.mean_of(lambda m: m.latency):7.2f}s "
+              f"{r.mean_of(lambda m: m.read_time):6.2f}s "
+              f"{r.mean_of(lambda m: m.write_time):6.2f}s "
+              f"{100*r.mean_of(lambda m: m.local_availability):6.1f}% "
+              f"{r.mean_of(lambda m: m.mean_hops):5.2f} "
+              f"{100*r.mean_of(lambda m: m.slo_violation_rate):7.1f}%")
     print("\nDatabelt keeps function state local (paper: 79% local, 0.21 "
           "hops, 0 SLO violations).")
 

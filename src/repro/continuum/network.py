@@ -67,6 +67,10 @@ class ContinuumNetwork:
         self.require_kinds = require_kinds
         self._cache: Dict[float, TopologyGraph] = {}
         self._reach_cache: Dict[float, Set[str]] = {}
+        # fault overrides (repro.sim.faults): drained nodes / lost links
+        # are filtered out of every snapshot until restored
+        self._down_nodes: Set[str] = set()
+        self._down_links: Set[Tuple[str, str]] = set()
         # persistent node objects so resource accounting survives snapshots
         self._nodes: Dict[str, Node] = {}
         self._make_nodes()
@@ -90,13 +94,52 @@ class ContinuumNetwork:
         return sorted(self._nodes)
 
     # ------------------------------------------------------------------
+    # fault overrides (driven by repro.sim.faults.FaultInjector)
+    # ------------------------------------------------------------------
+    def set_node_down(self, nid: str, down: bool = True) -> None:
+        """Drain/restore ``nid``: while down the node (and every link that
+        touches it) vanishes from all snapshots, so placement, transfers
+        and global-tier home hashing route around it.  Snapshot caches are
+        invalidated on every change; with no overrides active the builder
+        path is byte-identical to the fault-free network."""
+        before = nid in self._down_nodes
+        if down:
+            self._down_nodes.add(nid)
+        else:
+            self._down_nodes.discard(nid)
+        if before != down:
+            self._invalidate()
+
+    def set_link_down(self, a: str, b: str, down: bool = True) -> None:
+        """Lose/restore the (bidirectional) link between ``a`` and ``b``
+        in every snapshot until restored."""
+        pair = (a, b) if a <= b else (b, a)
+        before = pair in self._down_links
+        if down:
+            self._down_links.add(pair)
+        else:
+            self._down_links.discard(pair)
+        if before != down:
+            self._invalidate()
+
+    def _invalidate(self) -> None:
+        self._cache.clear()
+        self._reach_cache.clear()
+
+    def _link_up(self, a: str, b: str) -> bool:
+        if a in self._down_nodes or b in self._down_nodes:
+            return False
+        return ((a, b) if a <= b else (b, a)) not in self._down_links
+
+    # ------------------------------------------------------------------
     def graph_at(self, t: float) -> TopologyGraph:
         key = round(t / self.cache_quantum) * self.cache_quantum
         if key in self._cache:
             return self._cache[key]
         g = TopologyGraph()
         for n in self._nodes.values():
-            g.add_node(n)
+            if n.id not in self._down_nodes:
+                g.add_node(n)
         c = self.constellation
         pos = {c.sat_id(i): c.position(i, key) for i in range(len(c))}
         for s in self.sites:
@@ -106,7 +149,8 @@ class ContinuumNetwork:
             me = c.sat_id(i)
             for j in c.isl_neighbors(i):
                 other = c.sat_id(j)
-                if line_of_sight(pos[me], pos[other]):
+                if self._link_up(me, other) and \
+                        line_of_sight(pos[me], pos[other]):
                     g.add_link(me, other,
                                propagation_latency(pos[me], pos[other]),
                                ISL_BW, bidirectional=False)
@@ -118,7 +162,8 @@ class ContinuumNetwork:
                 continue
             for i in range(len(c)):
                 sid = c.sat_id(i)
-                if visible_from_ground(pos[s.id], pos[sid]):
+                if self._link_up(s.id, sid) and \
+                        visible_from_ground(pos[s.id], pos[sid]):
                     g.add_link(s.id, sid,
                                propagation_latency(pos[s.id], pos[sid]),
                                GROUND_BW)
@@ -128,7 +173,8 @@ class ContinuumNetwork:
                 continue
             for i in range(len(c)):
                 sid = c.sat_id(i)
-                if line_of_sight(pos[s.id], pos[sid]):
+                if self._link_up(s.id, sid) and \
+                        line_of_sight(pos[s.id], pos[sid]):
                     g.add_link(s.id, sid,
                                propagation_latency(pos[s.id], pos[sid]),
                                EO_BW)
@@ -139,8 +185,9 @@ class ContinuumNetwork:
         for s in self.sites:
             if s.kind in (EDGE, DRONE, GROUND):
                 for cl in clouds:
-                    if s.region is None or cl.region is None \
-                            or s.region == cl.region:
+                    if (s.region is None or cl.region is None
+                            or s.region == cl.region) \
+                            and self._link_up(s.id, cl.id):
                         g.add_link(s.id, cl.id, METRO_LATENCY, TERRA_BW)
         # inter-region WAN backbone: clouds pairwise over stretched
         # great-circle fiber (repro.continuum.regions.wan_latency)
@@ -148,8 +195,9 @@ class ContinuumNetwork:
             from repro.continuum.regions import WAN_BW, wan_latency
             for i, a in enumerate(clouds):
                 for b in clouds[i + 1:]:
-                    g.add_link(a.id, b.id, wan_latency(a.site, b.site),
-                               WAN_BW)
+                    if self._link_up(a.id, b.id):
+                        g.add_link(a.id, b.id, wan_latency(a.site, b.site),
+                                   WAN_BW)
         if len(self._cache) > 256:
             self._cache.clear()
         self._cache[key] = g
@@ -168,7 +216,7 @@ class ContinuumNetwork:
         *reach* a node of a required kind through the snapshot, computed
         by one multi-source BFS per snapshot and cached alongside it."""
         node = self._nodes.get(nid)
-        if node is None:
+        if node is None or nid in self._down_nodes:
             return False
         if node.kind != SAT:
             return True

@@ -99,6 +99,6 @@ class StateSession:
         loc = st._locate(key, reader, graph)
         if loc is None:
             return math.inf
-        stored, src = loc
+        stored, src, _ = loc
         lat, _ = st._transfer(graph, src, reader, stored.size)
         return 0.0 if src == reader else lat

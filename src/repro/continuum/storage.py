@@ -35,14 +35,14 @@ clock* that decides how timed legs are paid:
   so an autoscale capacity grow re-admits the *already-queued* backlog.
   Drives ``StateSession``'s default ``event`` mode.
 
-The preferred engine-facing surface is ``repro.continuum.session.
-StateSession``; the legacy generator entry points ``put_ev`` / ``get_ev``
-/ ``get_fused_ev`` remain as thin deprecated shims over the same path.
+The engine-facing surface is ``repro.continuum.session.StateSession``;
+the synchronous ``put``/``get``/``get_fused`` trio stays supported for
+direct storage use.  (The legacy ``put_ev``/``get_ev``/``get_fused_ev``
+generator shims completed their deprecation cycle and are gone.)
 """
 from __future__ import annotations
 
 import math
-import warnings
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -75,6 +75,8 @@ class AccessResult:
     hops: int
     local: bool
     from_global: bool = False
+    global_keys: int = 0        # keys served via the global tier (a
+                                # fused read resolves several at once)
     network_latency: float = 0.0  # path latency + wire transfer only
 
 
@@ -349,7 +351,8 @@ class TwoTierStorage:
                 src_node, KVS_OP_LATENCY + st.size / KVS_READ_BW)
             yield from clock.sleep(lat)
             return st, AccessResult(clock.total(), hops, False,
-                                    from_global=True, network_latency=lat)
+                                    from_global=True, global_keys=1,
+                                    network_latency=lat)
         return None, AccessResult(math.inf, 10**9, False)
 
     def _op_get_fused(self, keys, reader_node: str, clock):
@@ -358,13 +361,15 @@ class TwoTierStorage:
         graph = self.graph_fn(clock.now)
         by_source: Dict[str, float] = {}
         states = []
+        n_global = 0
         for key in keys:
             loc = self._locate(key, reader_node, graph, heal=True)
             if loc is None:
                 return None, AccessResult(math.inf, 10**9, False)
-            st, src = loc
+            st, src, from_global = loc
             by_source[src] = by_source.get(src, 0.0) + st.size
             states.append(st)
+            n_global += 1 if from_global else 0
         max_hops, all_local, net = 0, True, 0.0
         for src, size in by_source.items():
             lat, hops = self._transfer(graph, src, reader_node, size)
@@ -377,6 +382,8 @@ class TwoTierStorage:
             max_hops = max(max_hops, hops)
             all_local &= src == reader_node
         return states, AccessResult(clock.total(), max_hops, all_local,
+                                    from_global=n_global > 0,
+                                    global_keys=n_global,
                                     network_latency=net)
 
     # ------------------------------------------------------------------
@@ -418,51 +425,20 @@ class TwoTierStorage:
                                               _AnalyticClock(self, t)))
 
     # ------------------------------------------------------------------
-    # deprecated event-driven shims (use repro.continuum.session instead)
-    # ------------------------------------------------------------------
-    @staticmethod
-    def _deprecated(name: str):
-        warnings.warn(
-            f"TwoTierStorage.{name} is deprecated; use "
-            f"repro.continuum.session.StateSession (event mode) instead",
-            DeprecationWarning, stacklevel=3)
-
-    def put_ev(self, key: StateKey, size: float, payload=None,
-               writer_node: Optional[str] = None,
-               replicate_global: bool = True,
-               global_sync: bool = False, kernel=None):
-        """Deprecated: event-driven ``put`` — drive with ``yield from``
-        inside a kernel process.  Use ``StateSession.put`` instead."""
-        self._deprecated("put_ev")
-        return self._op_put(key, size, payload, _EventClock(self, kernel),
-                            writer_node=writer_node,
-                            replicate_global=replicate_global,
-                            global_sync=global_sync)
-
-    def get_ev(self, key: StateKey, reader_node: str, kernel=None):
-        """Deprecated: event-driven ``get``.  Use ``StateSession.get``."""
-        self._deprecated("get_ev")
-        return self._op_get(key, reader_node, _EventClock(self, kernel))
-
-    def get_fused_ev(self, keys, reader_node: str, kernel=None):
-        """Deprecated: event-driven ``get_fused``.  Use
-        ``StateSession.get_fused``."""
-        self._deprecated("get_fused_ev")
-        return self._op_get_fused(keys, reader_node,
-                                  _EventClock(self, kernel))
-
-    # ------------------------------------------------------------------
     def _locate(self, key: StateKey, reader: str, graph,
                 heal: bool = False):
+        """Resolve ``key`` for ``reader``: reader-local → holder node →
+        global tier.  Returns ``(state, serving_node, from_global)`` or
+        None."""
         enc = key.encoded()
         if enc in self.local.get(reader, {}):
-            return (self.local[reader][enc], reader)
+            return (self.local[reader][enc], reader, False)
         holder = key.storage_address
         if enc in self.local.get(holder, {}) and holder in graph.nodes:
-            return (self.local[holder][enc], holder)
+            return (self.local[holder][enc], holder, False)
         st, serving = self._global_locate(graph, enc, reader, heal=heal)
         if st is not None:
-            return (st, serving or holder)
+            return (st, serving or holder, True)
         return None
 
     WAN_EFFICIENCY = 0.6   # TCP over 45-75 ms RTT links never hits line rate

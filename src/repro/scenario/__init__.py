@@ -1,0 +1,5 @@
+from repro.scenario.spec import (NetworkSpec, Scenario,  # noqa: F401
+                                 ScenarioReport, WorkloadSpec,
+                                 workflow_maker)
+from repro.sim.autoscale import AutoscalePolicy  # noqa: F401
+from repro.sim.faults import FaultEvent, FaultPlan  # noqa: F401

@@ -46,6 +46,7 @@ from repro.core.slo import SLO
 from repro.core.strategy import make_strategy
 from repro.serverless.workflow import Workflow, make_payload
 from repro.sim.autoscale import AutoscalePolicy, Autoscaler
+from repro.sim.faults import FaultInjector, FaultPlan
 from repro.sim.kernel import SimKernel
 from repro.sim.metrics import ParallelReport
 from repro.sim.resources import ResourcePool
@@ -64,6 +65,7 @@ class InstanceMetrics:
     compute_time: float = 0.0
     reads: int = 0
     local_reads: int = 0
+    global_reads: int = 0   # reads served by the global-tier fallback
     hops: List[int] = field(default_factory=list)
     slo_violations: int = 0
     handoffs: int = 0
@@ -78,6 +80,11 @@ class InstanceMetrics:
     @property
     def mean_hops(self) -> float:
         return sum(self.hops) / max(len(self.hops), 1)
+
+    @property
+    def global_fallback_rate(self) -> float:
+        """Share of reads the global tier served (the churn signal)."""
+        return self.global_reads / max(self.reads, 1)
 
     @property
     def slo_violation_rate(self) -> float:
@@ -210,6 +217,7 @@ class WorkflowEngine:
                                   if k.storage_address != node} or {1})
             m.reads += len(need)
             m.local_reads += len(need) if res.local else 0
+            m.global_reads += res.global_keys
             m.hops.extend([res.hops] * len(need))
             m.read_time += res.latency
             # one sandbox for the whole group; the grouped prefetch
@@ -224,6 +232,7 @@ class WorkflowEngine:
                 lat_sum += r.latency
                 hops_list.append(r.hops)
                 nloc += 1 if r.local else 0
+                m.global_reads += 1 if r.from_global else 0
                 m.storage_ops += 1
             m.reads += len(need)
             m.local_reads += nloc
@@ -373,7 +382,8 @@ class WorkflowEngine:
                      t0: float = 0.0, stagger: float = 0.05,
                      entry: str = "drone0", workload=None,
                      record_trace: bool = False,
-                     autoscale: Optional[AutoscalePolicy] = None
+                     autoscale: Optional[AutoscalePolicy] = None,
+                     faults: Optional[FaultPlan] = None
                      ) -> ParallelReport:
         """n truly concurrent workflow instances on one shared event loop.
 
@@ -395,10 +405,26 @@ class WorkflowEngine:
         callable ``instance_index -> node id`` — a multi-region sweep
         spreads instances over per-region entry points this way.  A
         region-aware workload generator (``repro.sim.workload.
-        RegionalDiurnal``) provides such a callable as ``entry_for``."""
+        RegionalDiurnal``) provides such a callable as ``entry_for``.
+
+        ``faults`` attaches a churn schedule (``repro.sim.faults``): node
+        drains/restores and link losses replayed at exact simulated times
+        on the same kernel — drains park new work without preempting
+        anything in flight, and the topology routes around down nodes so
+        reads exercise the global tier's cross-region fallback.  Requires
+        the event-driven engine mode; the report carries the injector's
+        actions in ``report.faults``."""
+        if faults is not None and self.mode != "event":
+            raise ValueError(
+                "fault injection needs mode='event' — analytic "
+                "committed-schedule accounting cannot park requests on a "
+                "drained node")
         kernel = SimKernel(start=t0, record_trace=record_trace)
         scaler = Autoscaler(kernel, self.resources, autoscale).start() \
             if autoscale is not None else None
+        injector = FaultInjector(kernel, self.net, self.resources,
+                                 faults).start() \
+            if faults is not None else None
         results: List[tuple] = []
 
         def wrap(i: int):
@@ -440,4 +466,5 @@ class WorkflowEngine:
             pool=self.resources,
             events_processed=kernel.events_processed,
             trace=kernel.trace,
-            autoscale=scaler.report() if scaler is not None else None)
+            autoscale=scaler.report() if scaler is not None else None,
+            faults=injector.report() if injector is not None else None)

@@ -141,6 +141,20 @@ def flood_workflow(workflow_id: str = "flood") -> Workflow:
     return Workflow(workflow_id, fns, edges)
 
 
+def chain_workflow(workflow_id: str, depth: int = 3,
+                   compute_s_per_mb: float = 0.05) -> Workflow:
+    """Depth-``depth`` linear chain (the fusion benchmark's workload,
+    paper Table 4): lightweight functions passing state 1:1 down the
+    chain, so fusion depth is the only variable."""
+    fns = [ServerlessFunction(
+        f"f{i}", None, out_ratio=1.0,
+        demand=FunctionDemand(f"f{i}", cpu=0.25, mem=64e6, power=2.0,
+                              t_exc=1.0),
+        compute_s_per_mb=compute_s_per_mb) for i in range(depth)]
+    edges = [(f"f{i}", f"f{i+1}") for i in range(depth - 1)]
+    return Workflow(workflow_id, fns, edges)
+
+
 def make_payload(size_bytes: float, with_sar: bool = True) -> dict:
     """Synthetic drone video payload of roughly ``size_bytes``."""
     n = max(int(size_bytes / (32 * 32 * 4)), 4)

@@ -1,5 +1,7 @@
 from repro.sim.autoscale import (AutoscalePolicy, AutoscaleReport,  # noqa: F401
                                  Autoscaler)
+from repro.sim.faults import (FaultEvent, FaultInjector,  # noqa: F401
+                              FaultPlan, FaultReport)
 from repro.sim.kernel import SimKernel  # noqa: F401
 from repro.sim.metrics import ParallelReport, percentile  # noqa: F401
 from repro.sim.resources import ResourcePool, SlotResource  # noqa: F401

@@ -86,6 +86,7 @@ class AutoscaleAction:
 class AutoscaleReport:
     actions: List[AutoscaleAction] = field(default_factory=list)
     final_capacities: Dict[str, int] = field(default_factory=dict)
+    initial_capacities: Dict[str, int] = field(default_factory=dict)
 
     @property
     def scale_ups(self) -> int:
@@ -96,6 +97,34 @@ class AutoscaleReport:
     def scale_downs(self) -> int:
         return sum(1 for a in self.actions
                    if a.new_capacity < a.old_capacity)
+
+    def cost(self, rates: Dict[str, float], horizon_s: float) -> float:
+        """Cosmos-style $ audit: integrate provisioned capacity over the
+        run — ``sum over resources of capacity(t) x dt x rate[kind]``
+        for t in [0, horizon_s], where ``rates`` maps a resource kind
+        (``"cpu"`` / ``"kvs"``) to its $-per-slot-second price.  The
+        capacity timeline is reconstructed from ``initial_capacities``
+        and the recorded ``actions``; a fixed-capacity run (no actions)
+        therefore audits to ``initial x horizon x rate`` — the baseline
+        an autoscaled run's spend is compared against."""
+        by_res: Dict[str, List[AutoscaleAction]] = {}
+        for a in self.actions:
+            by_res.setdefault(a.resource, []).append(a)
+        total = 0.0
+        for name in sorted(set(self.initial_capacities) | set(by_res)):
+            rate = rates.get(name.split(":", 1)[0], 0.0)
+            if rate <= 0.0:
+                continue
+            acts = sorted(by_res.get(name, []), key=lambda a: a.t)
+            cap = self.initial_capacities.get(
+                name, acts[0].old_capacity if acts else 0)
+            t_prev = 0.0
+            for a in acts:
+                t = min(max(a.t, 0.0), horizon_s)
+                total += cap * max(t - t_prev, 0.0) * rate
+                t_prev, cap = t, a.new_capacity
+            total += cap * max(horizon_s - t_prev, 0.0) * rate
+        return total
 
 
 class Autoscaler:
@@ -142,6 +171,12 @@ class Autoscaler:
     def _decide(self, res: SlotResource, now: float,
                 p95_breach: bool) -> None:
         p = self.policy
+        if res.drained:
+            # a fault drain owns this resource until its restore: the
+            # controller must not re-provision a down node (nor count the
+            # outage as calm)
+            self._calm[res.name] = 0
+            return
         if self.pool.pending_grow_ready(res.name) is not None:
             # a grow is already provisioning: don't double-order capacity
             # (and don't count the interval as calm either)
@@ -195,6 +230,10 @@ class Autoscaler:
     def _apply_pending(self, res: SlotResource, new_cap: int,
                        reason: str) -> None:
         self.pool.clear_pending_grow(res.name)
+        if res.drained:
+            # the node went down while the grow was provisioning: the
+            # order is void — the fault restore re-establishes capacity
+            return
         if new_cap > res.capacity:
             self._apply(res, new_cap, self.kernel.now, reason)
 
@@ -213,7 +252,11 @@ class Autoscaler:
     # -- results ---------------------------------------------------------
     def report(self) -> AutoscaleReport:
         caps: Dict[str, int] = {}
+        init: Dict[str, int] = {}
         for kind in self.policy.kinds:     # managed kinds only
             caps.update(self.pool.capacities(kind))
+            init.update({res.name: res.initial_capacity
+                         for res in self.pool.resources(kind)})
         return AutoscaleReport(actions=list(self.actions),
-                               final_capacities=caps)
+                               final_capacities=caps,
+                               initial_capacities=init)

@@ -42,6 +42,8 @@ class ParallelReport:
     trace: Optional[list] = None
     # AutoscaleReport when the run had an autoscaler attached, else None
     autoscale: Optional[object] = None
+    # FaultReport when the run had a fault injector attached, else None
+    faults: Optional[object] = None
 
     @property
     def latencies(self) -> List[float]:
@@ -58,7 +60,7 @@ class ParallelReport:
     @classmethod
     def build(cls, instances, start_times, end_times, pool=None,
               events_processed: int = 0, trace=None,
-              autoscale=None) -> "ParallelReport":
+              autoscale=None, faults=None) -> "ParallelReport":
         lats = [m.latency for m in instances]
         t0 = min(start_times) if start_times else 0.0
         t1 = max(end_times) if end_times else 0.0
@@ -77,6 +79,7 @@ class ParallelReport:
             events_processed=events_processed,
             trace=trace,
             autoscale=autoscale,
+            faults=faults,
         )
 
     # list-compat -------------------------------------------------------

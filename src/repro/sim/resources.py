@@ -31,7 +31,11 @@ class SlotResource:
     grows pools under queue pressure (newly added servers admit parked
     held-slot waiters immediately) and shrinks them by draining — a
     retiring server finishes its in-flight job and simply takes no new
-    work; nothing is ever preempted.
+    work; nothing is ever preempted.  ``set_capacity(0)`` is a *full
+    drain* (the fault injector's forced node loss): in-flight work still
+    runs to completion, new held-slot requests park until a later grow
+    re-admits them, and analytic ``request``s on a fully drained resource
+    raise (churn requires the event-driven engine mode).
 
     FIFO is *per assignment time*: an analytic ``request`` commits its
     start slot at enqueue (the caller immediately sleeps the returned
@@ -58,6 +62,11 @@ class SlotResource:
         self.max_queue_depth = 0       # max jobs/processes waiting
         self.max_in_system = 0         # max queued-or-in-service
         self.last_busy_t = 0.0
+
+    @property
+    def drained(self) -> bool:
+        """True while a fault drain holds the capacity at 0."""
+        return self.capacity == 0
 
     # -- analytic one-shot jobs -----------------------------------------
     def _observe(self, t: float):
@@ -86,6 +95,11 @@ class SlotResource:
         """FIFO-enqueue a job of ``service_s``; returns the queueing wait.
         The job occupies a server during [t + wait, t + wait + service_s)."""
         self._observe(t)
+        if not self._free_at:
+            raise RuntimeError(
+                f"{self.name} is fully drained (capacity 0); analytic "
+                f"requests cannot park — run churn scenarios in the "
+                f"event-driven engine mode")
         start = max(t, heapq.heappop(self._free_at))
         end = start + service_s
         heapq.heappush(self._free_at, end)
@@ -148,8 +162,12 @@ class SlotResource:
         ...]`` for the caller to ``SimKernel.wake()``.  Shrink: drain-only —
         the idlest servers retire first and anything in flight (analytic
         backlog or held slots) runs to completion; excess held slots fall
-        away one release at a time via ``unhold``."""
-        new_cap = max(1, int(new_capacity))
+        away one release at a time via ``unhold``.  ``new_capacity=0`` is
+        the fault injector's forced node drain: every server retires and
+        held-slot waiters stay parked until a restore grows the pool
+        again (the autoscaler itself never requests 0 — its shrink floor
+        is the initial capacity)."""
+        new_cap = max(0, int(new_capacity))
         woken = []
         if new_cap > self.capacity:
             for _ in range(new_cap - self.capacity):

@@ -358,3 +358,39 @@ def test_provision_delay_defers_grow_and_stays_deterministic():
     # every applied grow landed a full provisioning delay after the
     # earliest control tick that could have ordered it
     assert min(a[0] for a in ups) >= 0.25 + 1.0
+
+
+# ---------------------------------------------------------------------------
+# cost audit (Cosmos-style $ per slot-second)
+# ---------------------------------------------------------------------------
+def test_autoscale_report_cost_integrates_capacity_timeline():
+    from repro.sim.autoscale import AutoscaleAction, AutoscaleReport
+    rep = AutoscaleReport(
+        actions=[AutoscaleAction(2.0, "cpu:n0", 1, 4, "queue"),
+                 AutoscaleAction(6.0, "cpu:n0", 4, 2, "idle"),
+                 AutoscaleAction(3.0, "kvs:n0", 1, 2, "queue")],
+        initial_capacities={"cpu:n0": 1, "kvs:n0": 1, "kvs:n1": 1})
+    rates = {"cpu": 1.0, "kvs": 0.5}
+    # cpu:n0: 1*2 + 4*4 + 2*4 = 26 slot-s at $1
+    # kvs:n0: (1*3 + 2*7) * 0.5 = 8.5 ; kvs:n1 (no actions): 10 * 0.5 = 5
+    assert rep.cost(rates, horizon_s=10.0) == pytest.approx(26 + 8.5 + 5)
+    # fixed baseline: no actions -> initial capacity x horizon
+    fixed = AutoscaleReport(initial_capacities={"cpu:n0": 1, "kvs:n0": 1,
+                                                "kvs:n1": 1})
+    assert fixed.cost(rates, 10.0) == pytest.approx(10 + 5 + 5)
+    # unpriced kinds cost nothing
+    assert rep.cost({"cpu": 1.0}, 10.0) == pytest.approx(26)
+
+
+def test_autoscaler_report_carries_initial_capacities(net_maker):
+    from repro.serverless.engine import WorkflowEngine
+    from repro.serverless.workflow import flood_workflow
+    eng = WorkflowEngine(net_maker(), strategy="stateless")
+    rep = eng.run_parallel(lambda wid: flood_workflow(wid), 16, 2e6,
+                           workload=ClosedLoop(clients=8),
+                           autoscale=AutoscalePolicy(p95_slo_s=8.0))
+    auto = rep.autoscale
+    assert auto.initial_capacities["kvs:cloud0"] == 1
+    assert set(auto.initial_capacities) == set(auto.final_capacities)
+    cost = auto.cost({"cpu": 4.8e-5, "kvs": 1.2e-5}, rep.makespan)
+    assert cost > 0

@@ -1,0 +1,202 @@
+"""repro.sim.faults: scheduled churn on the kernel.
+
+Covers: seeded plan generation is deterministic and non-overlapping per
+target, plans round-trip through dicts, network overrides take nodes and
+links out of every snapshot (and put them back), the resource drain is
+strictly non-preemptive (in-flight work completes, parked waiters are
+re-admitted on restore), churn runs replay bit-identically, and the
+cross-region fallback actually gets exercised while a cloud is down.
+"""
+import math
+
+import pytest
+
+from repro.continuum.regions import multiregion_network
+from repro.scenario import FaultPlan, NetworkSpec, Scenario, WorkloadSpec
+from repro.serverless.engine import WorkflowEngine
+from repro.serverless.workflow import flood_workflow
+from repro.sim.faults import (FaultEvent, FaultInjector, LINK_LOSS,
+                              NODE_DRAIN)
+from repro.sim.kernel import SimKernel
+from repro.sim.resources import ResourcePool, SlotResource
+from repro.sim.workload import RegionalDiurnal
+
+
+# ---------------------------------------------------------------------------
+# plan generation + serialization
+# ---------------------------------------------------------------------------
+def test_poisson_plan_is_deterministic_and_non_overlapping():
+    mk = lambda seed: FaultPlan.poisson(rate=0.5, outage_s=3.0,
+                                        targets=("cloud0", "cloud1"),
+                                        horizon_s=60.0, seed=seed)
+    a, b = mk(7), mk(7)
+    assert a.events == b.events and len(a) > 0
+    assert mk(8).events != a.events
+    # per-target outages never overlap: gaps include the outage length
+    for tgt in ("cloud0", "cloud1"):
+        ts = [e.t for e in a.events if e.node == tgt]
+        assert all(t2 - t1 >= 3.0 for t1, t2 in zip(ts, ts[1:]))
+    # events are globally time-sorted
+    assert [e.t for e in a.events] == sorted(e.t for e in a.events)
+
+
+def test_plan_dict_round_trip():
+    plan = FaultPlan(events=[
+        FaultEvent(1.0, 2.0, NODE_DRAIN, node="cloud0"),
+        FaultEvent(1.5, 0.5, LINK_LOSS, link=("sat0", "sat1"))])
+    rt = FaultPlan.from_dict(plan.to_dict())
+    assert rt.events == plan.events
+
+
+# ---------------------------------------------------------------------------
+# network overrides
+# ---------------------------------------------------------------------------
+def test_node_down_leaves_every_snapshot_until_restore():
+    net = multiregion_network(2)
+    assert "cloud0" in net.graph_at(0.0).nodes and net.available(
+        "cloud0", 0.0)
+    net.set_node_down("cloud0")
+    g = net.graph_at(0.0)
+    assert "cloud0" not in g.nodes
+    assert not net.available("cloud0", 0.0)
+    assert all("cloud0" not in g.neighbors(n) for n in g.nodes)
+    net.set_node_down("cloud0", down=False)
+    g2 = net.graph_at(0.0)
+    assert "cloud0" in g2.nodes and len(g2.neighbors("cloud0")) > 0
+
+
+def test_link_down_reroutes_and_restores():
+    net = multiregion_network(2)
+    g = net.graph_at(0.0)
+    assert "cloud1" in g.neighbors("cloud0")
+    net.set_link_down("cloud0", "cloud1")
+    g = net.graph_at(0.0)
+    assert "cloud1" not in g.neighbors("cloud0")
+    assert "cloud0" not in g.neighbors("cloud1")
+    # still reachable over the surviving mesh (sites + satellites)
+    path, lat = g.dijkstra("cloud0", "cloud1")
+    assert path and math.isfinite(lat)
+    net.set_link_down("cloud0", "cloud1", down=False)
+    assert "cloud1" in net.graph_at(0.0).neighbors("cloud0")
+
+
+# ---------------------------------------------------------------------------
+# drain semantics: never preempt, restores re-admit
+# ---------------------------------------------------------------------------
+def test_slot_drain_never_preempts_and_restore_readmits():
+    res = SlotResource("cpu:test", capacity=2)
+    t = 0.0
+    assert res.hold(t) and res.hold(t)          # both servers busy
+    assert res.set_capacity(0, t) == []         # drain: nothing woken...
+    assert res.capacity == 0 and res._held == 2  # ...nothing preempted
+    assert not res.hold(t)                      # new work parks
+    res.enqueue_waiter("proc-a", "a", t)
+    assert res.unhold(t) is None                # frees drain; no re-grant
+    assert res.unhold(t) is None
+    woken = res.set_capacity(2, 5.0)            # restore re-admits
+    assert [label for _, label in woken] == ["a"]
+    assert res.capacity == 2 and res._held == 1
+
+
+def test_analytic_request_on_drained_resource_raises():
+    res = SlotResource("kvs:test", capacity=1)
+    res.set_capacity(0, 0.0)
+    with pytest.raises(RuntimeError, match="drained"):
+        res.request(0.0, 1.0)
+
+
+def test_engine_rejects_faults_in_analytic_mode():
+    eng = WorkflowEngine(multiregion_network(2), strategy="databelt",
+                        mode="analytic")
+    with pytest.raises(ValueError, match="event"):
+        eng.run_parallel(lambda wid: flood_workflow(wid), 2, 2e6,
+                         faults=FaultPlan.poisson(0.5, 2.0, ("cloud0",),
+                                                  5.0))
+
+
+# ---------------------------------------------------------------------------
+# injector end to end
+# ---------------------------------------------------------------------------
+def _churn_scenario(strategy: str = "stateless",
+                    record_trace: bool = False) -> Scenario:
+    return Scenario(
+        network=NetworkSpec(regions=2),
+        workload=WorkloadSpec(kind="regional_diurnal", rate=8.0,
+                              peak_to_trough=2.0, seed=11),
+        strategy=strategy, n=24, input_bytes=2e6,
+        faults=FaultPlan(events=[
+            FaultEvent(2.0, 5.0, NODE_DRAIN, node="cloud0"),
+            FaultEvent(4.0, 3.0, NODE_DRAIN, node="cloud1")]),
+        record_trace=record_trace)
+
+
+def test_churn_run_completes_everything_and_reports():
+    rep = _churn_scenario().run()
+    assert len(rep.instances) == 24
+    assert all(math.isfinite(m.latency) and m.latency > 0
+               for m in rep.instances)
+    assert rep.faults.drains == 2 and rep.faults.restores == 2
+    assert rep.faults.link_losses == 0
+
+
+def test_churn_replay_is_bit_identical():
+    a = _churn_scenario(record_trace=True).run()
+    b = _churn_scenario(record_trace=True).run()
+    assert a.trace == b.trace and len(a.trace) > 0
+    assert a.latencies == b.latencies
+
+
+def test_churn_is_strictly_slower_never_lossy():
+    calm = _churn_scenario().replace(faults=None).run()
+    churn = _churn_scenario().run()
+    assert len(churn.instances) == len(calm.instances)
+    # the drained cloud parks stateless writes: tail latency rises
+    assert churn.p95 > calm.p95
+
+
+def test_fallback_reads_exercised_while_cloud_down():
+    """While one cloud drains, reads of state homed there must be served
+    by the surviving region's shard (the cross-region fallback path)."""
+    calm = _churn_scenario().replace(faults=None).run()
+    churn = _churn_scenario().run()
+    fb = lambda rep: sum(m.global_reads for m in rep.instances)
+    assert fb(churn) > fb(calm)
+
+
+def test_fallback_reads_counted_under_fusion_too():
+    """Fused grouped reads resolve several keys at once; keys served via
+    the global tier must still land in ``global_reads`` (the churn
+    observability signal must not go dark when groups fuse).  Depth 2
+    still has cross-group fetches of cloud-homed state; at full fusion
+    the only fetch is the entry-local input, so 0 is then genuine."""
+    churn = _churn_scenario().replace(fusion_depth=2).run()
+    assert sum(m.global_reads for m in churn.instances) > 0
+    for m in churn.instances:
+        assert 0 <= m.global_reads <= m.reads
+
+
+def test_overlapping_drain_of_same_node_is_skipped():
+    net = multiregion_network(2)
+    pool = ResourcePool()
+    kernel = SimKernel()
+    plan = FaultPlan(events=[
+        FaultEvent(1.0, 10.0, NODE_DRAIN, node="cloud0"),
+        FaultEvent(2.0, 10.0, NODE_DRAIN, node="cloud0")])
+    inj = FaultInjector(kernel, net, pool, plan).start()
+    kernel.run()
+    rep = inj.report()
+    assert rep.drains == 1 and len(rep.skipped) == 1
+    assert rep.restores == 1
+    # after the (single) restore the node is back
+    assert "cloud0" in net.graph_at(kernel.now).nodes
+    assert pool.kvs("cloud0").capacity >= 1
+
+
+def test_databelt_degrades_less_than_stateless_under_same_plan():
+    """The fig18 acceptance criterion at test scale: identical plan, the
+    strategy keeping state off the cloud suffers a smaller p95 hit."""
+    def deg(strategy):
+        calm = _churn_scenario(strategy).replace(faults=None).run()
+        churn = _churn_scenario(strategy).run()
+        return churn.p95 / calm.p95
+    assert deg("databelt") < deg("stateless")

@@ -1,0 +1,205 @@
+"""repro.scenario: the declarative run-spec is the supported front door.
+
+Golden equivalence is the redesign's hard contract: the fig13 / fig14 /
+fig17 configurations expressed as ``Scenario`` must produce **bit-
+identical** metrics to the hand-wired ``ContinuumNetwork`` +
+``WorkflowEngine`` + ``run_parallel`` path they replace.  On top of that:
+dict round-trips run identically, ``sweep`` expands deterministic grids,
+the sequential kind reproduces the classic ``run_instance`` loop, and the
+spec validates its axes with useful errors.
+"""
+import json
+
+import pytest
+
+from repro.continuum.network import ContinuumNetwork
+from repro.continuum.orbits import Constellation
+from repro.continuum.regions import multiregion_network
+from repro.core.baselines import RandomPlacement
+from repro.scenario import (AutoscalePolicy, FaultPlan, NetworkSpec,
+                            Scenario, ScenarioReport, WorkloadSpec,
+                            workflow_maker)
+from repro.serverless.engine import WorkflowEngine
+from repro.serverless.workflow import flood_workflow
+from repro.sim import ClosedLoop
+from repro.sim.workload import RegionalDiurnal
+
+
+def _hand_net():
+    return ContinuumNetwork(Constellation(n_planes=8, sats_per_plane=8))
+
+
+# ---------------------------------------------------------------------------
+# golden equivalence: Scenario == the hand-wired path, bit for bit
+# ---------------------------------------------------------------------------
+def test_fig13_config_bit_identical_to_hand_wired():
+    """The fig13 cell: default network, UniformStagger(0.05), 2 MB."""
+    for strat in ("databelt", "stateless"):
+        eng = WorkflowEngine(_hand_net(), strategy=strat)
+        hand = eng.run_parallel(lambda wid: flood_workflow(wid), 16, 2e6,
+                                stagger=0.05)
+        rep = Scenario(workload=WorkloadSpec(kind="stagger", stagger=0.05),
+                       strategy=strat, n=16, input_bytes=2e6).run()
+        assert rep.latencies == hand.latencies, strat
+        assert [m.read_time for m in rep.instances] \
+            == [m.read_time for m in hand.instances], strat
+        assert rep.rep.kvs_queues == hand.kvs_queues, strat
+
+
+def test_fig14_config_bit_identical_to_hand_wired():
+    """The fig14 cell: ClosedLoop clients + the SLO-aware autoscaler."""
+    pol = AutoscalePolicy(interval_s=0.5, queue_high=2.0, p95_slo_s=10.0,
+                          max_capacity=64)
+    eng = WorkflowEngine(_hand_net(), strategy="stateless")
+    hand = eng.run_parallel(lambda wid: flood_workflow(wid), 32, 2e6,
+                            workload=ClosedLoop(clients=16), autoscale=pol)
+    rep = Scenario(workload=WorkloadSpec(kind="closed_loop", clients=16),
+                   strategy="stateless", n=32, input_bytes=2e6,
+                   autoscale=AutoscalePolicy(
+                       interval_s=0.5, queue_high=2.0, p95_slo_s=10.0,
+                       max_capacity=64)).run()
+    assert rep.latencies == hand.latencies
+    assert [(a.t, a.resource, a.new_capacity)
+            for a in rep.autoscale.actions] \
+        == [(a.t, a.resource, a.new_capacity)
+            for a in hand.autoscale.actions]
+
+
+def test_fig17_config_bit_identical_to_hand_wired():
+    """The fig17 cell: 2-region continuum + RegionalDiurnal entries."""
+    eng = WorkflowEngine(multiregion_network(2), strategy="stateless")
+    w = RegionalDiurnal(regions=2, rate=20.0, peak_to_trough=2.0, seed=17)
+    hand = eng.run_parallel(lambda wid: flood_workflow(wid), 16, 2e6,
+                            workload=w, entry=w.entry_for)
+    rep = Scenario(network=NetworkSpec(regions=2),
+                   workload=WorkloadSpec(kind="regional_diurnal",
+                                         rate=20.0, peak_to_trough=2.0,
+                                         seed=17),
+                   strategy="stateless", n=16, input_bytes=2e6).run()
+    assert rep.latencies == hand.latencies
+    assert [m.hops for m in rep.instances] \
+        == [m.hops for m in hand.instances]
+
+
+def test_sequential_kind_matches_run_instance_loop():
+    """The Table 2 regime: one instance per ``spacing`` on one engine."""
+    eng = WorkflowEngine(_hand_net(), strategy="random")
+    hand = [eng.run_instance(flood_workflow(f"wf{i}"), 10e6, t0=i * 90.0)
+            for i in range(4)]
+    rep = Scenario(workload=WorkloadSpec(kind="sequential", spacing=90.0),
+                   strategy="random", n=4, input_bytes=10e6).run()
+    assert rep.latencies == [m.latency for m in hand]
+    assert [m.write_time for m in rep.instances] \
+        == [m.write_time for m in hand]
+
+
+# ---------------------------------------------------------------------------
+# serialization round-trip
+# ---------------------------------------------------------------------------
+def _full_spec() -> Scenario:
+    return Scenario(
+        network=NetworkSpec(regions=2),
+        workload=WorkloadSpec(kind="regional_diurnal", rate=8.0, seed=11),
+        strategy="databelt", n=8, input_bytes=2e6,
+        autoscale=AutoscalePolicy(p95_slo_s=12.0),
+        faults=FaultPlan.poisson(rate=0.2, outage_s=4.0,
+                                 targets=("cloud0",), horizon_s=10.0,
+                                 seed=5),
+        record_trace=True)
+
+
+def test_round_trip_through_json_runs_identically():
+    sc = _full_spec()
+    d = json.loads(json.dumps(sc.to_dict()))   # must be pure JSON types
+    rt = Scenario.from_dict(d)
+    assert rt.to_dict() == sc.to_dict()        # stable fixpoint
+    a, b = sc.run(), rt.run()
+    assert a.latencies == b.latencies
+    assert a.trace == b.trace and len(a.trace) > 0
+    assert a.faults.drains == b.faults.drains > 0
+
+
+def test_round_trip_preserves_defaults():
+    sc = Scenario()
+    rt = Scenario.from_dict(sc.to_dict())
+    assert rt == sc
+
+
+def test_prebuilt_strategy_instance_is_rebound_and_deterministic():
+    """A prebuilt instance is a template: the scenario re-instantiates it
+    against its own freshly built network, so repeated runs are identical
+    (no RNG/memo state leaks across runs) and equal to the registry-name
+    spelling with the same seed."""
+    sc = Scenario(strategy=RandomPlacement(None, None), n=4)
+    a, b = sc.run(), sc.run()
+    assert a.latencies == b.latencies
+    named = Scenario(strategy="random", n=4).run()
+    assert a.latencies == named.latencies
+
+
+def test_unregistered_strategy_instance_does_not_serialize():
+    class Anon(RandomPlacement):
+        name = ""
+    sc = Scenario(strategy=Anon(None, None))
+    with pytest.raises(ValueError, match="unregistered"):
+        sc.to_dict()
+    # registered instances serialize by their registry name
+    sc2 = Scenario(strategy=RandomPlacement(None, None))
+    assert sc2.to_dict()["strategy"] == "random"
+
+
+# ---------------------------------------------------------------------------
+# sweep
+# ---------------------------------------------------------------------------
+def test_sweep_expands_cartesian_grid_in_order():
+    base = Scenario()
+    grid = base.sweep(n=[1, 2], strategy=["databelt", "stateless"])
+    assert [(s.n, s.strategy) for s in grid] == [
+        (1, "databelt"), (1, "stateless"),
+        (2, "databelt"), (2, "stateless")]
+    # the base scenario is never mutated
+    assert base.n == 16 and base.strategy == "databelt"
+
+
+def test_sweep_nested_axes_reach_sub_specs():
+    base = Scenario()
+    grid = base.sweep(network__regions=[1, 4],
+                      workload__rate=[5.0, 10.0])
+    assert [(s.network.regions, s.workload.rate) for s in grid] == [
+        (1, 5.0), (1, 10.0), (4, 5.0), (4, 10.0)]
+
+
+# ---------------------------------------------------------------------------
+# validation + registry
+# ---------------------------------------------------------------------------
+def test_validation_errors():
+    with pytest.raises(ValueError, match="mode"):
+        Scenario(mode="sometimes").run()
+    with pytest.raises(ValueError, match="workload kind"):
+        Scenario(workload=WorkloadSpec(kind="bursty")).run()
+    with pytest.raises(ValueError, match="workflow"):
+        Scenario(workflow="fib").run()
+    with pytest.raises(ValueError, match="event"):
+        Scenario(mode="analytic",
+                 faults=FaultPlan.poisson(0.1, 1.0, ("cloud0",),
+                                          5.0)).run()
+    with pytest.raises(ValueError, match="sequential"):
+        Scenario(workload=WorkloadSpec(kind="sequential"),
+                 autoscale=AutoscalePolicy()).run()
+
+
+def test_workflow_registry():
+    wf = workflow_maker("chain:4")("c0")
+    assert [f.name for f in wf.functions] == ["f0", "f1", "f2", "f3"]
+    assert workflow_maker("flood")("w").workflow_id == "w"
+    with pytest.raises(ValueError, match="unknown workflow"):
+        workflow_maker("fib:3")
+
+
+def test_scenario_report_row_shape():
+    rep = Scenario(n=2).run()
+    assert isinstance(rep, ScenarioReport)
+    row = rep.row(parallel=2)
+    assert row["system"] == "databelt" and row["parallel"] == 2
+    assert set(row) >= {"throughput_rps", "p50_s", "p95_s", "p99_s",
+                        "mean_latency_s", "events"}

@@ -3,10 +3,10 @@ and engine↔strategy contracts.
 
 Covers: string names resolve through the registry (with helpful errors),
 custom strategies are drop-in via ``register_strategy`` or as prebuilt
-instances, the legacy ``put_ev``/``get_ev``/``get_fused_ev`` generators
-emit ``DeprecationWarning`` while returning results identical to the
-session path, the session's two modes share one storage implementation,
-and the region-aware workload generator is deterministic.
+instances, the retired ``put_ev``/``get_ev``/``get_fused_ev`` shims are
+really gone (``AttributeError``), the session's two modes share one
+storage implementation, and the region-aware workload generator is
+deterministic.
 """
 import math
 import warnings
@@ -123,14 +123,8 @@ def test_engine_accepts_prebuilt_strategy_instance(net):
 
 
 # ---------------------------------------------------------------------------
-# legacy storage shims: deprecated but identical
+# legacy storage shims: retired
 # ---------------------------------------------------------------------------
-def _twin(net):
-    """Two storages over the same topology with independent queues."""
-    return (TwoTierStorage(net.graph_at, resources=ResourcePool()),
-            TwoTierStorage(net.graph_at, resources=ResourcePool()))
-
-
 def _drive(kernel, gen):
     """Run one op generator to completion on a private kernel, returning
     its result."""
@@ -143,35 +137,14 @@ def _drive(kernel, gen):
     return box["r"]
 
 
-def test_legacy_ev_shims_warn_and_match_session(net):
-    st_old, st_new = _twin(net)
-    k_old, k_new = SimKernel(), SimKernel()
-    session = StateSession(st_new, k_new)         # event-driven default
-    key = StateKey("w", "sat0", "f1")
-    key2 = StateKey("w", "sat1", "f2")
-
-    with pytest.warns(DeprecationWarning, match="put_ev"):
-        r_old = _drive(k_old, st_old.put_ev(key, 2e6, writer_node="sat0",
-                                            kernel=k_old))
-    r_new = _drive(k_new, session.put(key, 2e6, writer="sat0"))
-    assert r_old == r_new
-    with pytest.warns(DeprecationWarning, match="put_ev"):
-        _drive(k_old, st_old.put_ev(key2, 1e6, writer_node="sat1",
-                                    kernel=k_old))
-    _drive(k_new, session.put(key2, 1e6, writer="sat1"))
-
-    with pytest.warns(DeprecationWarning, match="get_ev"):
-        s_old, g_old = _drive(k_old, st_old.get_ev(key, "sat2",
-                                                   kernel=k_old))
-    s_new, g_new = _drive(k_new, session.get(key, "sat2"))
-    assert g_old == g_new and s_old.size == s_new.size
-
-    with pytest.warns(DeprecationWarning, match="get_fused_ev"):
-        _, f_old = _drive(k_old, st_old.get_fused_ev([key, key2], "sat2",
-                                                     kernel=k_old))
-    _, f_new = _drive(k_new, session.get_fused([key, key2], "sat2"))
-    assert f_old == f_new
-    assert k_old.now == k_new.now     # identical simulated cost
+def test_legacy_ev_shims_are_retired(net):
+    """The deprecated generator trio completed its deprecation cycle
+    (ROADMAP: one PR after the StateSession redesign) and is deleted —
+    ``StateSession`` is the only event-driven entry point."""
+    st = TwoTierStorage(net.graph_at, resources=ResourcePool())
+    for name in ("put_ev", "get_ev", "get_fused_ev"):
+        with pytest.raises(AttributeError):
+            getattr(st, name)
 
 
 def test_sync_trio_stays_supported_without_warning(net):
