@@ -1,61 +1,125 @@
-"""Paper Fig. 16: control-plane node-election runtime, 10 -> 10,000 nodes.
+"""Paper Fig. 16 revived as the instance-scale yardstick (ROADMAP:
+"Raise the scale ceiling").
 
-Times the Databelt Compute phase (Dijkstra + reversed-path election with
-vicinity pruning) on synthetic random-geometric topologies, against Random
-election.  Paper: Databelt stays near Random because candidate-subset
-pruning bounds the decision space.
+Sweeps fleet size through the declarative ``Scenario`` front door —
+1k -> 10k -> 100k concurrent flood workflows on the shared event kernel —
+and emits ``experiments/bench/BENCH_scale.json`` with the scale
+trajectory future PRs are gated on:
+
+* ``instances_per_s``  — simulated instances completed per wall-clock
+  second (the headline number; higher is better),
+* ``wall_per_10k_s``   — wall-clock seconds normalized to 10k instances,
+* ``peak_rss_mb``      — peak resident set of the point's process.
+
+Each point runs in a subprocess so peak RSS is that point's own
+high-water mark, not the sweep's.  Points use the engine's scale knobs
+(``collect="aggregate"`` running aggregates + ``lazy_arrivals`` feeder
+spawning) — the configuration a 100k+ fleet actually needs; the pinned
+paper figures (fig13/14/17/18) keep the bit-identical defaults.
+
+Regression gate: with ``BENCH_SCALE_GATE=1`` the sweep fails if any
+point's ``instances_per_s`` lands >20% below the committed baseline
+(``benchmarks/BENCH_scale_baseline.json``).  Point sizes can be
+overridden with ``BENCH_SCALE_SIZES=1000,10000`` (CI smoke runs the 1k
+point only).
 """
 from __future__ import annotations
 
-import random
+import json
+import os
+import resource
+import subprocess
+import sys
 import time
+from pathlib import Path
 
-from benchmarks.common import FULL, emit
-from repro.core.propagation import compute
-from repro.core.topology import Node, TopologyGraph
+from benchmarks.common import FULL, OUT, emit
 
-SIZES = [10, 100, 1000, 10_000] if not FULL else [10, 50, 100, 500, 1000,
-                                                  5000, 10_000]
+SIZES = [1000, 10_000, 100_000] if FULL else [1000, 10_000]
+_ENV_SIZES = os.environ.get("BENCH_SCALE_SIZES")
+if _ENV_SIZES:
+    SIZES = [int(s) for s in _ENV_SIZES.split(",")]
+
+BASELINE_PATH = Path(__file__).resolve().parent / \
+    "BENCH_scale_baseline.json"
+GATE_SLACK = 0.8          # fail when below 80% of baseline instances/sec
 
 
-def synthetic_topology(n: int, degree: int = 4, seed: int = 0):
-    rng = random.Random(seed)
-    g = TopologyGraph()
-    for i in range(n):
-        g.add_node(Node(f"n{i}", "satellite"))
-    for i in range(n):
-        # ring + random chords: connected, low diameter
-        g.add_link(f"n{i}", f"n{(i + 1) % n}", 0.002, 12.5e9)
-        for _ in range(degree - 2):
-            j = rng.randrange(n)
-            if j != i:
-                g.add_link(f"n{i}", f"n{j}", 0.004, 12.5e9)
-    return g
+def run_point(n: int) -> dict:
+    """One fleet-size point, in this process: n concurrent flood
+    workflows via ``Scenario`` with the scale knobs on."""
+    from repro.scenario import Scenario
+
+    sc = Scenario(n=n, strategy="databelt", input_bytes=2e6,
+                  collect="aggregate", lazy_arrivals=True)
+    t0 = time.perf_counter()
+    rep = sc.run()
+    wall = time.perf_counter() - t0
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    return {
+        "n": n,
+        "wall_s": round(wall, 2),
+        "instances_per_s": round(n / wall, 1),
+        "wall_per_10k_s": round(wall * 10_000 / n, 2),
+        "peak_rss_mb": round(rss_mb, 1),
+        "events": rep.rep.events_processed,
+        "throughput_rps": round(rep.throughput_rps, 4),
+        "p50_s": round(rep.p50, 3),
+        "p95_s": round(rep.p95, 3),
+    }
+
+
+def _point_in_subprocess(n: int) -> dict:
+    """Run one point isolated, so ``peak_rss_mb`` is per-point truth."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig16_service_scale",
+         "--point", str(n)],
+        capture_output=True, text=True, env=os.environ.copy(),
+        cwd=Path(__file__).resolve().parent.parent)
+    if proc.returncode != 0:
+        raise RuntimeError(f"scale point n={n} failed:\n{proc.stderr}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def _load_baseline() -> dict:
+    if BASELINE_PATH.exists():
+        return json.loads(BASELINE_PATH.read_text())
+    return {}
 
 
 def run():
-    rows = []
+    baseline = _load_baseline()
+    gate = os.environ.get("BENCH_SCALE_GATE", "0") == "1"
+    rows, failures = [], []
     for n in SIZES:
-        g = synthetic_topology(n)
-        ids = sorted(g.nodes)
-        rng = random.Random(1)
-        reps = 20 if n <= 1000 else 5
-        t0 = time.perf_counter()
-        for r in range(reps):
-            src, dst = rng.choice(ids), rng.choice(ids)
-            compute(g, src, dst, 2e6, 0.06)
-        db_us = (time.perf_counter() - t0) / reps * 1e6
-        t0 = time.perf_counter()
-        for r in range(reps):
-            rng.choice(ids)
-        rnd_us = (time.perf_counter() - t0) / reps * 1e6
-        rows.append({"nodes": n, "databelt_us": round(db_us, 1),
-                     "random_us": round(rnd_us, 2)})
-    derived = {f"n{r['nodes']}_us": r["databelt_us"] for r in rows}
-    emit("fig16_service_scale", rows[-1]["databelt_us"], derived,
-         {"rows": rows})
+        row = _point_in_subprocess(n)
+        base = baseline.get(str(n))
+        if base is not None:
+            row["baseline_instances_per_s"] = base
+            row["vs_baseline"] = round(row["instances_per_s"] / base, 3)
+            if gate and row["instances_per_s"] < GATE_SLACK * base:
+                failures.append(
+                    f"n={n}: {row['instances_per_s']} instances/s is "
+                    f"<{GATE_SLACK:.0%} of baseline {base}")
+        rows.append(row)
+        print(f"  scale n={n}: {row['instances_per_s']} instances/s, "
+              f"{row['wall_per_10k_s']}s/10k, rss={row['peak_rss_mb']}MB",
+              flush=True)
+    derived = {f"n{r['n']}_ips": r["instances_per_s"] for r in rows}
+    emit("fig16_service_scale", rows[-1]["wall_per_10k_s"] * 1e6,
+         derived, {"rows": rows})
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "BENCH_scale.json").write_text(json.dumps(
+        {"name": "BENCH_scale", "sizes": SIZES, "rows": rows,
+         "baseline": baseline, "gate_slack": GATE_SLACK}, indent=1))
+    if failures:
+        raise SystemExit("BENCH_scale regression gate: "
+                         + "; ".join(failures))
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    if len(sys.argv) >= 3 and sys.argv[1] == "--point":
+        print(json.dumps(run_point(int(sys.argv[2]))))
+    else:
+        run()

@@ -4,6 +4,7 @@
     PYTHONPATH=src python -m benchmarks.run --only fig13_throughput
     PYTHONPATH=src python -m benchmarks.run --list
     PYTHONPATH=src python -m benchmarks.run --scenario smoke-databelt
+    PYTHONPATH=src python -m benchmarks.run --scenario-file spec.json
 
 Two registries:
 
@@ -78,21 +79,42 @@ def _scenarios() -> dict:
     return specs
 
 
-def run_scenario(name: str) -> dict:
-    """Resolve ``name``, round-trip the spec through the Scenario
-    serialization contract, run it, and print the standard row."""
+def _run_spec(spec: dict, label: str) -> dict:
+    """Round-trip ``spec`` through the Scenario serialization contract,
+    run it, and print the standard row."""
     from repro.scenario import Scenario
+    sc = Scenario.from_dict(spec)
+    rt = Scenario.from_dict(json.loads(json.dumps(sc.to_dict())))
+    assert rt.to_dict() == sc.to_dict(), \
+        f"scenario {label!r} does not round-trip through to_dict/from_dict"
+    row = rt.run().row(scenario=label)
+    print(json.dumps(row))
+    return row
+
+
+def run_scenario(name: str) -> dict:
     specs = _scenarios()
     if name not in specs:
         raise SystemExit(f"unknown scenario {name!r}; known: "
                          f"{', '.join(sorted(specs))}")
-    sc = Scenario.from_dict(specs[name])
-    rt = Scenario.from_dict(json.loads(json.dumps(sc.to_dict())))
-    assert rt.to_dict() == sc.to_dict(), \
-        f"scenario {name!r} does not round-trip through to_dict/from_dict"
-    row = rt.run().row(scenario=name)
-    print(json.dumps(row))
-    return row
+    return _run_spec(specs[name], name)
+
+
+def run_scenario_file(path: str) -> dict:
+    """Run an external ``Scenario.to_dict()``-format JSON spec file, so
+    experiment grids can live outside the repo (ROADMAP small item)."""
+    import pathlib
+    p = pathlib.Path(path)
+    if not p.exists():
+        raise SystemExit(f"scenario file not found: {path}")
+    try:
+        spec = json.loads(p.read_text())
+    except json.JSONDecodeError as e:
+        raise SystemExit(f"scenario file {path} is not valid JSON: {e}")
+    if not isinstance(spec, dict):
+        raise SystemExit(f"scenario file {path} must hold one JSON "
+                         f"object in Scenario.to_dict() format")
+    return _run_spec(spec, p.stem)
 
 
 def main() -> None:
@@ -104,6 +126,9 @@ def main() -> None:
     ap.add_argument("--scenario", action="append", default=[],
                     help="run a named Scenario spec (round-tripped "
                          "through to_dict/from_dict)")
+    ap.add_argument("--scenario-file", action="append", default=[],
+                    help="run an external Scenario.to_dict() JSON spec "
+                         "file (same round-trip contract)")
     args = ap.parse_args()
 
     if args.list:
@@ -115,9 +140,11 @@ def main() -> None:
             print(f"  {name}")
         return
 
-    if args.scenario:
+    if args.scenario or args.scenario_file:
         for name in args.scenario:
             run_scenario(name)
+        for path in args.scenario_file:
+            run_scenario_file(path)
         if not args.only:
             return
 

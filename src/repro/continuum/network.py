@@ -19,11 +19,14 @@ import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Set, Tuple
 
+import numpy as np
+
 from repro.continuum.orbits import (Constellation, GroundSite,
-                                    line_of_sight, propagation_latency,
-                                    visible_from_ground)
-from repro.core.topology import (CLOUD, DRONE, EDGE, EO, GROUND, SAT, Node,
-                                 TopologyGraph)
+                                    line_of_sight_batch,
+                                    propagation_latency_batch,
+                                    visible_from_ground_batch)
+from repro.core.topology import (CLOUD, DRONE, EDGE, EO, GROUND, SAT, Link,
+                                 Node, TopologyGraph)
 
 ISL_BW = 100e9 / 8          # bytes/s (100 Gb/s)
 GROUND_BW = 300e6 / 8       # bytes/s (300 Mb/s)
@@ -67,6 +70,11 @@ class ContinuumNetwork:
         self.require_kinds = require_kinds
         self._cache: Dict[float, TopologyGraph] = {}
         self._reach_cache: Dict[float, Set[str]] = {}
+        # last-answer memo: consecutive graph_at calls overwhelmingly ask
+        # for the exact same t (every storage op in an event re-resolves
+        # the snapshot), so short-circuit before the quantum arithmetic
+        self._last_t: Optional[float] = None
+        self._last_g: Optional[TopologyGraph] = None
         # fault overrides (repro.sim.faults): drained nodes / lost links
         # are filtered out of every snapshot until restored
         self._down_nodes: Set[str] = set()
@@ -74,6 +82,20 @@ class ContinuumNetwork:
         # persistent node objects so resource accounting survives snapshots
         self._nodes: Dict[str, Node] = {}
         self._make_nodes()
+        # static ISL pair list (src, dst index arrays) in the exact order
+        # the scalar builder visited them — link insertion order shapes
+        # adjacency iteration order, which downstream tie-breaks see
+        c = self.constellation
+        pairs = [(i, j) for i in range(len(c)) for j in c.isl_neighbors(i)]
+        self._isl_src = np.array([p[0] for p in pairs], dtype=np.intp)
+        self._isl_dst = np.array([p[1] for p in pairs], dtype=np.intp)
+        # node kinds are static across snapshots, so every fault-free
+        # snapshot can be born with its ids_of_kind memo pre-warmed
+        # (identical to what the lazy path would compute: sorted ids)
+        kinds: Dict[str, List[str]] = {}
+        for nid, n in self._nodes.items():
+            kinds.setdefault(n.kind, []).append(nid)
+        self._kind_ids_tmpl = {k: (1, sorted(v)) for k, v in kinds.items()}
 
     def _make_nodes(self):
         c = self.constellation
@@ -125,6 +147,7 @@ class ContinuumNetwork:
     def _invalidate(self) -> None:
         self._cache.clear()
         self._reach_cache.clear()
+        self._last_t = self._last_g = None
 
     def _link_up(self, a: str, b: str) -> bool:
         if a in self._down_nodes or b in self._down_nodes:
@@ -133,51 +156,78 @@ class ContinuumNetwork:
 
     # ------------------------------------------------------------------
     def graph_at(self, t: float) -> TopologyGraph:
+        if t == self._last_t:
+            return self._last_g
         key = round(t / self.cache_quantum) * self.cache_quantum
-        if key in self._cache:
-            return self._cache[key]
+        g = self._cache.get(key)
+        if g is not None:
+            self._last_t, self._last_g = t, g
+            return g
+        # The builder fills ``g.nodes``/``g.adj`` directly (same insertion
+        # order as the add_node/add_link calls it replaces — adjacency
+        # iteration order shapes downstream tie-breaks) and stamps the
+        # version once at the end: snapshots are born with empty caches,
+        # so per-mutation version bumps only cost time.
         g = TopologyGraph()
+        nodes, adj = g.nodes, g.adj
         for n in self._nodes.values():
             if n.id not in self._down_nodes:
-                g.add_node(n)
+                nodes[n.id] = n
+                adj[n.id] = {}
+        if not self._down_nodes:
+            g._kind_ids.update(self._kind_ids_tmpl)
         c = self.constellation
-        pos = {c.sat_id(i): c.position(i, key) for i in range(len(c))}
+        nsat = len(c)
+        sat_ids = [c.sat_id(i) for i in range(nsat)]
+        # positions stay SCALAR math trig (libm sin/cos are not correctly
+        # rounded — a numpy version would change values); only the
+        # pairwise visibility/latency tests below are batched, with
+        # arithmetic that reproduces the scalar predicates bit-exactly
+        pos = {sat_ids[i]: c.position(i, key) for i in range(nsat)}
         for s in self.sites:
             pos[s.id] = s.site.position(key)
-        # ISLs
-        for i in range(len(c)):
-            me = c.sat_id(i)
-            for j in c.isl_neighbors(i):
-                other = c.sat_id(j)
-                if self._link_up(me, other) and \
-                        line_of_sight(pos[me], pos[other]):
-                    g.add_link(me, other,
-                               propagation_latency(pos[me], pos[other]),
-                               ISL_BW, bidirectional=False)
+        sat_pos = (np.array([pos[sid] for sid in sat_ids])
+                   if nsat else np.empty((0, 3)))
+        # ISLs — one batched line-of-sight + latency pass over the static
+        # pair list, visited in the scalar builder's exact order
+        if nsat:
+            a, b = sat_pos[self._isl_src], sat_pos[self._isl_dst]
+            los = line_of_sight_batch(a, b)
+            lat = propagation_latency_batch(a, b).tolist()
+            isl_src, isl_dst = self._isl_src, self._isl_dst
+            for k in np.nonzero(los)[0].tolist():
+                me = sat_ids[isl_src[k]]
+                other = sat_ids[isl_dst[k]]
+                if self._link_up(me, other):
+                    adj[me][other] = Link(me, other, lat[k], ISL_BW)
         # ground <-> satellite: the CLOUD has no direct satellite link —
         # it reaches orbit via ground stations + terrestrial backbone,
         # which is what makes cloud state multi-hop from a satellite
         for s in self.sites:
-            if s.kind in (EO, CLOUD):
+            if s.kind in (EO, CLOUD) or not nsat:
                 continue
-            for i in range(len(c)):
-                sid = c.sat_id(i)
-                if self._link_up(s.id, sid) and \
-                        visible_from_ground(pos[s.id], pos[sid]):
-                    g.add_link(s.id, sid,
-                               propagation_latency(pos[s.id], pos[sid]),
-                               GROUND_BW)
+            vis = visible_from_ground_batch(pos[s.id], sat_pos)
+            lat = propagation_latency_batch(np.array([pos[s.id]]),
+                                            sat_pos).tolist()
+            sid_ = s.id
+            for k in np.nonzero(vis)[0].tolist():
+                sat = sat_ids[k]
+                if self._link_up(sid_, sat):
+                    adj[sid_][sat] = Link(sid_, sat, lat[k], GROUND_BW)
+                    adj[sat][sid_] = Link(sat, sid_, lat[k], GROUND_BW)
         # EO satellite(s): ISL-class links to visible LEO sats
         for s in self.sites:
-            if s.kind != EO:
+            if s.kind != EO or not nsat:
                 continue
-            for i in range(len(c)):
-                sid = c.sat_id(i)
-                if self._link_up(s.id, sid) and \
-                        line_of_sight(pos[s.id], pos[sid]):
-                    g.add_link(s.id, sid,
-                               propagation_latency(pos[s.id], pos[sid]),
-                               EO_BW)
+            site_arr = np.array([pos[s.id]])      # broadcasts over sats
+            los = line_of_sight_batch(site_arr, sat_pos)
+            lat = propagation_latency_batch(site_arr, sat_pos).tolist()
+            sid_ = s.id
+            for k in np.nonzero(los)[0].tolist():
+                sat = sat_ids[k]
+                if self._link_up(sid_, sat):
+                    adj[sid_][sat] = Link(sid_, sat, lat[k], EO_BW)
+                    adj[sat][sid_] = Link(sat, sid_, lat[k], EO_BW)
         # terrestrial backbone: edges/drones/ground <-> their cloud.
         # Region-tagged sites connect only to their own region's cloud at
         # metro latency; untagged sites keep the legacy all-clouds wiring.
@@ -188,7 +238,10 @@ class ContinuumNetwork:
                     if (s.region is None or cl.region is None
                             or s.region == cl.region) \
                             and self._link_up(s.id, cl.id):
-                        g.add_link(s.id, cl.id, METRO_LATENCY, TERRA_BW)
+                        adj[s.id][cl.id] = Link(s.id, cl.id, METRO_LATENCY,
+                                                TERRA_BW)
+                        adj[cl.id][s.id] = Link(cl.id, s.id, METRO_LATENCY,
+                                                TERRA_BW)
         # inter-region WAN backbone: clouds pairwise over stretched
         # great-circle fiber (repro.continuum.regions.wan_latency)
         if len(clouds) > 1:
@@ -196,11 +249,14 @@ class ContinuumNetwork:
             for i, a in enumerate(clouds):
                 for b in clouds[i + 1:]:
                     if self._link_up(a.id, b.id):
-                        g.add_link(a.id, b.id, wan_latency(a.site, b.site),
-                                   WAN_BW)
+                        wl = wan_latency(a.site, b.site)
+                        adj[a.id][b.id] = Link(a.id, b.id, wl, WAN_BW)
+                        adj[b.id][a.id] = Link(b.id, a.id, wl, WAN_BW)
+        g._version = 1
         if len(self._cache) > 256:
             self._cache.clear()
         self._cache[key] = g
+        self._last_t, self._last_g = t, g
         return g
 
     # ------------------------------------------------------------------
@@ -222,7 +278,7 @@ class ContinuumNetwork:
             return True
         g = self.graph_at(t)
         if self.require_kinds is None:
-            return len(g.neighbors(nid)) > 0
+            return bool(g.adj.get(nid))
         return nid in self._reachable(t)
 
     def _reachable(self, t: float) -> Set[str]:

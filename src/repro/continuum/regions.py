@@ -257,6 +257,9 @@ class GlobalTier:
 
     def __init__(self):
         self.shards: Dict[str, Dict[str, object]] = {}
+        # (enc, regions) -> home shard: rendezvous hashing is pure, and
+        # rewrites of the same key re-derive the same home every put
+        self._home_cache: Dict[Tuple[str, Tuple[str, ...]], str] = {}
 
     @staticmethod
     def _weight(region: str, enc: str) -> int:
@@ -269,8 +272,16 @@ class GlobalTier:
     def home(self, enc: str, regions: Sequence[str]) -> str:
         if not regions:
             return self.UNSHARDED
-        return max(sorted(regions),
-                   key=lambda r: self._weight(r, enc))
+        if len(regions) == 1:
+            return regions[0]          # max over one candidate: no hash
+        key = (enc, tuple(regions))
+        hit = self._home_cache.get(key)
+        if hit is None:
+            hit = max(sorted(regions), key=lambda r: self._weight(r, enc))
+            if len(self._home_cache) > (1 << 20):
+                self._home_cache.clear()   # bound memory at fleet scale
+            self._home_cache[key] = hit
+        return hit
 
     def put(self, enc: str, state, region: Optional[str]) -> None:
         """Record ``enc`` in ``region``'s shard (single-replica compat

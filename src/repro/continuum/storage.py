@@ -62,14 +62,14 @@ PARTITION_DETOUR_LATENCY_S = 1.0
 PARTITION_DETOUR_HOPS = 8
 
 
-@dataclass
+@dataclass(slots=True)
 class StoredState:
     key: StateKey
     size: float
     payload: object = None
 
 
-@dataclass
+@dataclass(slots=True)
 class AccessResult:
     latency: float              # total (KVS + serialization + network)
     hops: int
@@ -195,8 +195,7 @@ class TwoTierStorage:
 
     @staticmethod
     def _clouds(graph: TopologyGraph) -> List[str]:
-        return sorted(n.id for n in graph.nodes.values()
-                      if n.kind == CLOUD)
+        return graph.ids_of_kind(CLOUD)
 
     # -- global-tier replication (k=2 fan-out) --------------------------
     def _replicate_targets(self, graph: TopologyGraph, src: str,
@@ -275,8 +274,9 @@ class TwoTierStorage:
             dst = src
             st = StoredState(key.moved(src), size, payload)
             lat, hops = 0.0, 0
-        self.local.setdefault(dst, {})[st.key.encoded()] = st
-        self.local.setdefault(dst, {})[key.encoded()] = st
+        bucket = self.local.setdefault(dst, {})
+        bucket[st.key.encoded()] = st
+        bucket[key.encoded()] = st
         if not account:
             if replicate_global:
                 self._replicate_record(graph, src, key, st)
@@ -447,13 +447,11 @@ class TwoTierStorage:
                   size: float) -> Tuple[float, int]:
         if src == dst:
             return 0.0, 0
-        path, lat = graph.dijkstra(src, dst)
-        if not path:
-            return math.inf, 10**9
-        bw = min((graph.adj[a][b].bandwidth for a, b in zip(path, path[1:])),
-                 default=0.0)
+        # latency / bottleneck-bw / hops are memoized per (src, dst) on
+        # the snapshot; only the size-dependent wire time is per-op
+        lat, bw, hops = graph.path_cost(src, dst)
         if bw <= 0:
             return math.inf, 10**9
         if bw < 1e9:           # constrained (ground/WAN) bottleneck
             bw *= self.WAN_EFFICIENCY
-        return lat + size / bw, len(path) - 1
+        return lat + size / bw, hops

@@ -40,9 +40,14 @@ class RandomPlacement(StateStrategy):
                  seed: int = 0):
         super().__init__(graph_fn, available, slo, seed=seed)
         self.rng = random.Random(seed)
+        self._ids_for: object = None      # snapshot the memo belongs to
+        self._ids: list = []
 
     def offload_state(self, function_id: str, host: str, t: float,
                       key: StateKey) -> StateKey:
         graph = self.graph_fn(t)
-        ids = sorted(graph.nodes)
-        return key.moved(self.rng.choice(ids))
+        # snapshots are cached per time quantum, so identity comparison
+        # memoizes the sorted id list across the ops sharing a snapshot
+        if graph is not self._ids_for:
+            self._ids_for, self._ids = graph, sorted(graph.nodes)
+        return key.moved(self.rng.choice(self._ids))

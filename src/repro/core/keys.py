@@ -5,6 +5,7 @@ only state-location coupling between functions ("key-based isolation").
 """
 from __future__ import annotations
 
+import sys
 from dataclasses import dataclass, replace
 
 
@@ -15,7 +16,16 @@ class StateKey:
     function_id: str
 
     def encoded(self) -> str:
-        return f"{self.workflow_id}::{self.storage_address}::{self.function_id}"
+        # memoized + interned: keys are encoded on every storage op and
+        # used as store-dict keys, where interning makes lookups pointer
+        # comparisons.  The cached string lives outside the dataclass
+        # fields, so eq/hash/replace semantics are untouched.
+        enc = self.__dict__.get("_enc")
+        if enc is None:
+            enc = sys.intern(f"{self.workflow_id}::{self.storage_address}"
+                             f"::{self.function_id}")
+            object.__setattr__(self, "_enc", enc)
+        return enc
 
     @staticmethod
     def decode(s: str) -> "StateKey":

@@ -19,7 +19,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.slo import SLO, FunctionDemand, locality_penalty
+from repro.core.slo import SLO, FunctionDemand
 from repro.core.topology import CLOUD, SAT, TopologyGraph
 
 
@@ -33,23 +33,46 @@ class WorkflowSpec:
     sink_kind: str = CLOUD                # final function gravitates here
                                           # ("" disables the sink rule)
 
-    def topo_order(self) -> List[str]:
-        indeg = {f: 0 for f in self.functions}
-        for _, j in self.edges:
-            indeg[j] += 1
+    def _edge_cache(self):
+        """Memoized (topo order, predecessor lists, successor lists).
+
+        The spec is static once the engine starts planning, but a spec is
+        a plain mutable dataclass, so the memo is guarded on the list
+        lengths — appending a function or edge rebuilds it.  (In-place
+        element *replacement* is not detected; no caller does that.)
+        The planner asks for the order and the predecessors of every
+        function once per instance, which at 100k instances made these
+        linear edge scans a measurable hot spot."""
+        guard = (len(self.functions), len(self.edges))
+        cached = self.__dict__.get("_edges_memo")
+        if cached is not None and cached[0] == guard:
+            return cached[1]
+        preds: Dict[str, List[str]] = {f: [] for f in self.functions}
+        succs: Dict[str, List[str]] = {f: [] for f in self.functions}
+        for i, j in self.edges:
+            preds.setdefault(j, []).append(i)
+            succs.setdefault(i, []).append(j)
+        indeg = {f: len(preds.get(f, ())) for f in self.functions}
         order, frontier = [], [f for f, d in indeg.items() if d == 0]
         while frontier:
             f = frontier.pop(0)
             order.append(f)
-            for i, j in self.edges:
-                if i == f:
-                    indeg[j] -= 1
-                    if indeg[j] == 0:
-                        frontier.append(j)
-        return order
+            for j in succs.get(f, ()):
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    frontier.append(j)
+        memo = (order, preds, succs)
+        self.__dict__["_edges_memo"] = (guard, memo)
+        return memo
+
+    def topo_order(self) -> List[str]:
+        return self._edge_cache()[0]
 
     def predecessors(self, f: str) -> List[str]:
-        return [i for i, j in self.edges if j == f]
+        return self._edge_cache()[1].get(f, [])
+
+    def successors(self, f: str) -> List[str]:
+        return self._edge_cache()[2].get(f, [])
 
 
 @dataclass
@@ -68,11 +91,38 @@ def vicinity(graph: TopologyGraph, center: str, radius_s: float,
     for ``dijkstra`` — one pass serves every placement query from the same
     anchor instead of re-walking the graph per function.  Distances are
     exact shortest paths (the old standalone BFS froze a node's distance at
-    the first push, overestimating on multi-path topologies)."""
+    the first push, overestimating on multi-path topologies).  The sorted
+    ball is memoized on the graph (version-guarded): every instance
+    planned in the same snapshot quantum asks for the same few anchors.
+    Treat the returned list as read-only."""
+    key = (center, radius_s, limit)
+    hit = graph._vicinity.get(key)
+    if hit is not None and hit[0] == graph._version:
+        return hit[1]
     dist, _ = graph.sssp(center)
     near = sorted((d, n) for n, d in dist.items()
                   if d <= radius_s and n in graph.nodes)
-    return [n for _, n in near[:limit]]
+    out = [n for _, n in near[:limit]]
+    graph._vicinity[key] = (graph._version, out)
+    return out
+
+
+def vicinity_of_kinds(graph: TopologyGraph, center: str, radius_s: float,
+                      kinds, limit: int = 64) -> List[str]:
+    """``vicinity`` filtered to nodes whose kind is in ``kinds`` — the
+    planner's candidate list.  Memoized on the graph alongside the
+    unfiltered ball (the 4-tuple key cannot collide with vicinity's
+    3-tuples), so the per-function kind scan runs once per (snapshot,
+    anchor) instead of once per planned instance.  Read-only."""
+    key = (center, radius_s, limit, tuple(kinds))
+    hit = graph._vicinity.get(key)
+    if hit is not None and hit[0] == graph._version:
+        return hit[1]
+    nodes = graph.nodes
+    out = [n for n in vicinity(graph, center, radius_s, limit)
+           if nodes[n].kind in kinds]
+    graph._vicinity[key] = (graph._version, out)
+    return out
 
 
 def vicinity_uncached(graph: TopologyGraph, center: str, radius_s: float,
@@ -110,7 +160,8 @@ def plan_workflow(graph: TopologyGraph, wf: WorkflowSpec, slo: SLO,
                   busy: Optional[Dict[str, float]] = None,
                   now: float = 0.0, busy_weight: float = 1.0,
                   home_nodes: Optional[Sequence[str]] = None,
-                  region_weight: float = 0.0) -> Plan:
+                  region_weight: float = 0.0,
+                  undo_log: Optional[list] = None) -> Plan:
     """Greedy Eq. 9 minimizer with vicinity pruning + R-constraint checks.
 
     ``busy`` (node -> busy-until time) adds HyperDrive-style load
@@ -130,7 +181,16 @@ def plan_workflow(graph: TopologyGraph, wf: WorkflowSpec, slo: SLO,
 
     The sink node (R-6 gravity) is the *nearest* node of ``sink_kind``
     from the entry, so in a multi-region topology each workflow sinks to
-    its own region's cloud rather than a global first-by-id one."""
+    its own region's cloud rather than a global first-by-id one.
+
+    ``undo_log`` (when given) records every node-accounting mutation as
+    ``(node, mem_used, cpu_used, power_used, temp_extra)`` with the
+    values *before* the mutation.  Replaying it in reverse restores the
+    exact prior floats — which is what lets a caller plan directly on a
+    shared graph (keeping its warm SSSP caches) instead of paying a
+    ``copy_shallow`` per plan.  Subtracting the demands back out would
+    NOT be equivalent: ``(x + d) - d`` can differ from ``x`` in the last
+    ulp, and repeated over 100k plans that residue drifts."""
     placement: Dict[str, str] = {}
     considered = 0
     objective = 0.0
@@ -139,14 +199,18 @@ def plan_workflow(graph: TopologyGraph, wf: WorkflowSpec, slo: SLO,
                   if h in graph.nodes] \
         if home_nodes and region_weight > 0.0 else []
     order = wf.topo_order()
+    # per-source (dist, hop-count) tables hoisted out of the candidate
+    # loop: dist[n] is exactly dijkstra(src, n)'s latency and
+    # hops_map(src)[n] exactly hops(src, n), so the score below is
+    # bit-identical to the per-pair form it replaces.
+    srcinfo: Dict[str, tuple] = {}
     for idx, f in enumerate(order):
         preds = wf.predecessors(f)
         anchor = placement.get(preds[0]) if preds else entry_node
         anchor = anchor or entry_node
         is_sink = idx == len(order) - 1 and wf.sink_kind
         cands = [cloud] if is_sink and cloud in graph.nodes else \
-            [n for n in vicinity(graph, anchor, radius_s)
-             if graph.nodes[n].kind in compute_kinds]
+            vicinity_of_kinds(graph, anchor, radius_s, compute_kinds)
         considered += len(cands)
         anchor_home = 0.0
         if home_dists:
@@ -174,11 +238,16 @@ def plan_workflow(graph: TopologyGraph, wf: WorkflowSpec, slo: SLO,
                 src = placement.get(p)
                 if src is None:
                     continue
-                _, lat = graph.dijkstra(src, n)
+                info = srcinfo.get(src)
+                if info is None:
+                    info = (graph.sssp(src)[0], graph.hops_map(src))
+                    srcinfo[src] = info
+                lat = info[0].get(n, math.inf)
                 if lat > slo.max_handoff_s:
                     ok = False
                     break
-                cost += lat + locality_penalty(graph, src, n, gamma_per_hop)
+                # == lat + locality_penalty(graph, src, n, gamma_per_hop)
+                cost += lat + gamma_per_hop * info[1][n]
             if not ok:
                 continue
             if busy is not None:
@@ -197,12 +266,27 @@ def plan_workflow(graph: TopologyGraph, wf: WorkflowSpec, slo: SLO,
         objective += best_cost
         node = graph.nodes.get(best)
         if node is not None:
+            if undo_log is not None:
+                undo_log.append((node, node.mem_used, node.cpu_used,
+                                 node.power_used, node.temp_extra))
             node.mem_used += d.mem
             node.cpu_used += d.cpu
             node.power_used += d.power
             if node.kind == SAT:
                 node.temp_extra += d.t_exc
     return Plan(placement, objective, considered)
+
+
+def undo_plan(undo_log: list) -> None:
+    """Restore node accounting mutated by ``plan_workflow(...,
+    undo_log=log)``: replay in reverse, writing back the exact saved
+    values (bit-identical, unlike subtracting demands back out)."""
+    for node, mem_used, cpu_used, power_used, temp_extra in \
+            reversed(undo_log):
+        node.mem_used = mem_used
+        node.cpu_used = cpu_used
+        node.power_used = power_used
+        node.temp_extra = temp_extra
 
 
 # ---------------------------------------------------------------------------

@@ -39,8 +39,10 @@ class Node:
         return self.position(t)
 
 
-@dataclass
+@dataclass(slots=True)
 class Link:
+    """A directed link; ``slots`` because snapshot builds create ~10^2 of
+    these per topology quantum (10^5+ over a large run)."""
     src: str
     dst: str
     latency: float              # seconds (one-way)
@@ -65,6 +67,30 @@ class TopologyGraph:
         self._version = 0
         self._sssp: Dict[str, Tuple[int, Dict[str, float],
                                     Dict[str, str]]] = {}
+        # version-guarded derived-result memos (values are pure functions
+        # of the topology, so replaying them is exact):
+        # (src, dst) -> (version, path, latency); callers must not mutate
+        # the shared path list
+        self._paths: Dict[Tuple[str, str], Tuple[int, List[str],
+                                                 float]] = {}
+        # (kind, src) -> (version, nearest id)
+        self._nearest: Dict[Tuple[str, str], Tuple[int,
+                                                   Optional[str]]] = {}
+        # planner vicinity memo: (center, radius, limit) -> (version, ids)
+        self._vicinity: Dict[Tuple[str, float, int],
+                             Tuple[int, List[str]]] = {}
+        # src -> (version, {node: hop count along the SSSP tree})
+        self._hops: Dict[str, Tuple[int, Dict[str, int]]] = {}
+        # kind -> (version, sorted node ids of that kind)
+        self._kind_ids: Dict[str, Tuple[int, List[str]]] = {}
+        # (src, dst) -> (version, (latency, bottleneck bw, hops))
+        self._pathcost: Dict[Tuple[str, str],
+                             Tuple[int, Tuple[float, float, int]]] = {}
+        # (src, dst) -> (version, {node on path: (prefix latency,
+        #                                         prefix bottleneck bw)})
+        self._prefix: Dict[Tuple[str, str],
+                           Tuple[int, Dict[str, Tuple[float,
+                                                      float]]]] = {}
 
     def add_node(self, node: Node):
         self.nodes[node.id] = node
@@ -131,17 +157,26 @@ class TopologyGraph:
 
     def dijkstra(self, src: str, dst: str) -> Tuple[List[str], float]:
         """Lowest-latency path src -> dst.  Returns (path, total_latency);
-        ([], inf) when unreachable.  Served from the per-source cache."""
+        ([], inf) when unreachable.  Served from the per-source cache;
+        the reconstructed path is additionally memoized per (src, dst) —
+        transfer-heavy steps ask for the same few pairs thousands of
+        times.  Treat the returned path as read-only."""
         if src == dst:
             return [src], 0.0
+        hit = self._paths.get((src, dst))
+        if hit is not None and hit[0] == self._version:
+            return hit[1], hit[2]
         dist, prev = self._sssp_from(src)
         if dst not in dist:
-            return [], math.inf
-        path = [dst]
-        while path[-1] != src:
-            path.append(prev[path[-1]])
-        path.reverse()
-        return path, dist[dst]
+            path, lat = [], math.inf
+        else:
+            path = [dst]
+            while path[-1] != src:
+                path.append(prev[path[-1]])
+            path.reverse()
+            lat = dist[dst]
+        self._paths[(src, dst)] = (self._version, path, lat)
+        return path, lat
 
     def dijkstra_uncached(self, src: str, dst: str
                           ) -> Tuple[List[str], float]:
@@ -176,26 +211,110 @@ class TopologyGraph:
         path.reverse()
         return path, dist[dst]
 
+    def ids_of_kind(self, kind: str) -> List[str]:
+        """Sorted ids of every node of ``kind``, memoized per version
+        (the global tier asks for the cloud list once per storage op).
+        Read-only."""
+        hit = self._kind_ids.get(kind)
+        if hit is not None and hit[0] == self._version:
+            return hit[1]
+        out = sorted(n.id for n in self.nodes.values() if n.kind == kind)
+        self._kind_ids[kind] = (self._version, out)
+        return out
+
     def nearest_of_kind(self, src: str, kind: str) -> Optional[str]:
         """Lowest-latency node of ``kind`` from ``src`` (ties break on node
         id); the lexicographically first node of the kind when ``src`` can
         reach none of them, None when the kind is absent.  With a single
         node of the kind this is a pure lookup (no SSSP pass), so
         single-region topologies stay on the exact pre-multi-region path."""
-        cands = sorted(n.id for n in self.nodes.values() if n.kind == kind)
+        hit = self._nearest.get((kind, src))
+        if hit is not None and hit[0] == self._version:
+            return hit[1]
+        cands = self.ids_of_kind(kind)
         if not cands:
-            return None
-        if len(cands) == 1 or src not in self.nodes:
-            return cands[0]
-        dist, _ = self.sssp(src)
-        return min(cands, key=lambda c: (dist.get(c, math.inf), c))
+            out = None
+        elif len(cands) == 1 or src not in self.nodes:
+            out = cands[0]
+        else:
+            dist, _ = self.sssp(src)
+            out = min(cands, key=lambda c: (dist.get(c, math.inf), c))
+        self._nearest[(kind, src)] = (self._version, out)
+        return out
 
     def path_latency(self, path: List[str]) -> float:
         return sum(self.latency(a, b) for a, b in zip(path, path[1:]))
 
+    def path_cost(self, src: str, dst: str) -> Tuple[float, float, int]:
+        """(dijkstra latency, bottleneck bandwidth, hop count) of the
+        cached lowest-latency path, memoized per (src, dst): the transfer
+        model asks for the same pair once per storage op, and the min
+        over link bandwidths is a pure function of the path.  Returns
+        ``(inf, 0.0, 10**9)`` when unreachable."""
+        if src == dst:
+            return 0.0, math.inf, 0
+        hit = self._pathcost.get((src, dst))
+        if hit is not None and hit[0] == self._version:
+            return hit[1]
+        path, lat = self.dijkstra(src, dst)
+        if not path:
+            out = (math.inf, 0.0, 10**9)
+        else:
+            bw = min((self.adj[a][b].bandwidth
+                      for a, b in zip(path, path[1:])), default=0.0)
+            out = (lat, bw, len(path) - 1)
+        self._pathcost[(src, dst)] = (self._version, out)
+        return out
+
+    def path_prefix_costs(self, src: str, dst: str
+                          ) -> Dict[str, Tuple[float, float]]:
+        """For each node ``b`` on the cached lowest-latency src->dst path
+        (excluding ``src``): ``(latency of the path prefix up to b,
+        bottleneck bandwidth of that prefix)`` — accumulated left to
+        right exactly like a per-candidate prefix walk, so the values
+        are bit-identical to re-walking the path per candidate.  Empty
+        when unreachable.  Memoized per (src, dst); read-only."""
+        hit = self._prefix.get((src, dst))
+        if hit is not None and hit[0] == self._version:
+            return hit[1]
+        path, _ = self.dijkstra(src, dst)
+        out: Dict[str, Tuple[float, float]] = {}
+        lat_acc, bw = 0.0, math.inf
+        for a, b in zip(path, path[1:]):
+            link = self.adj.get(a, {}).get(b)
+            lat_acc = lat_acc + (link.latency if link else math.inf)
+            bw = min(bw, link.bandwidth if link else 0.0)
+            out[b] = (lat_acc, bw)
+        self._prefix[(src, dst)] = (self._version, out)
+        return out
+
     def hops(self, src: str, dst: str) -> int:
         path, lat = self.dijkstra(src, dst)
         return max(len(path) - 1, 0) if math.isfinite(lat) else 10**9
+
+    def hops_map(self, src: str) -> Dict[str, int]:
+        """Hop counts from ``src`` to every reachable node, resolved from
+        the same cached SSSP tree ``hops`` walks — so for any reachable
+        ``dst``, ``hops_map(src)[dst] == hops(src, dst)`` exactly.
+        Unreachable nodes are absent (``hops`` answers 10**9 for those).
+        The planner's scoring loop uses this to avoid a path
+        reconstruction per (source, candidate) pair.  Read-only."""
+        hit = self._hops.get(src)
+        if hit is not None and hit[0] == self._version:
+            return hit[1]
+        dist, prev = self._sssp_from(src)
+        hm: Dict[str, int] = {src: 0}
+        for n in dist:
+            chain = []
+            cur = n
+            while cur not in hm:
+                chain.append(cur)
+                cur = prev[cur]
+            base = hm[cur]
+            for k in range(len(chain) - 1, -1, -1):
+                hm[chain[k]] = base + len(chain) - k
+        self._hops[src] = (self._version, hm)
+        return hm
 
     def copy_shallow(self) -> "TopologyGraph":
         g = TopologyGraph()
@@ -205,4 +324,11 @@ class TopologyGraph:
         # version counter keep later mutations from cross-contaminating
         g._version = self._version
         g._sssp = dict(self._sssp)
+        g._paths = dict(self._paths)
+        g._nearest = dict(self._nearest)
+        g._vicinity = dict(self._vicinity)
+        g._hops = dict(self._hops)
+        g._kind_ids = dict(self._kind_ids)
+        g._pathcost = dict(self._pathcost)
+        g._prefix = dict(self._prefix)
         return g

@@ -207,6 +207,13 @@ class Scenario:
     seed: int = 0
     real_compute: bool = False
     record_trace: bool = False
+    # scale knobs (see ``WorkflowEngine.run_parallel``): ``collect``
+    # switches per-instance metric lists for constant-memory running
+    # aggregates; ``lazy_arrivals`` feeds instances into the kernel at
+    # their arrival times instead of pre-scheduling all n upfront.
+    # Defaults preserve bit-identical reports for every pinned figure.
+    collect: str = "full"
+    lazy_arrivals: bool = False
 
     # -- validation ------------------------------------------------------
     def validate(self) -> None:
@@ -226,6 +233,15 @@ class Scenario:
             raise ValueError(
                 "sequential workloads run one private kernel per "
                 "instance — autoscale/faults need a concurrent kind")
+        if self.collect not in ("full", "aggregate"):
+            raise ValueError(f"unknown collect mode {self.collect!r}; "
+                             f"choose 'full' or 'aggregate'")
+        if self.workload.kind == "sequential" and (
+                self.collect != "full" or self.lazy_arrivals):
+            raise ValueError(
+                "collect='aggregate'/lazy_arrivals are run_parallel scale "
+                "knobs — sequential workloads never hold a fleet in "
+                "memory, so they have nothing to save")
 
     # -- construction (exactly the hand-wired path) ----------------------
     def build_network(self) -> ContinuumNetwork:
@@ -276,7 +292,8 @@ class Scenario:
             rep = eng.run_parallel(
                 maker, self.n, self.input_bytes, workload=workload,
                 entry=entry, record_trace=self.record_trace,
-                autoscale=self.autoscale, faults=self.faults)
+                autoscale=self.autoscale, faults=self.faults,
+                collect=self.collect, lazy_arrivals=self.lazy_arrivals)
         return ScenarioReport(scenario=self, rep=rep)
 
     # -- serialization ---------------------------------------------------
@@ -313,6 +330,8 @@ class Scenario:
             "seed": self.seed,
             "real_compute": self.real_compute,
             "record_trace": self.record_trace,
+            "collect": self.collect,
+            "lazy_arrivals": self.lazy_arrivals,
         }
 
     @classmethod
@@ -340,6 +359,8 @@ class Scenario:
             seed=int(d.get("seed", 0)),
             real_compute=bool(d.get("real_compute", False)),
             record_trace=bool(d.get("record_trace", False)),
+            collect=d.get("collect", "full"),
+            lazy_arrivals=bool(d.get("lazy_arrivals", False)),
         )
 
     # -- grid expansion --------------------------------------------------

@@ -32,6 +32,7 @@ latency, and per-node queue depth (``repro.sim.ParallelReport``).
 """
 from __future__ import annotations
 
+import gc
 import time as _time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -41,16 +42,16 @@ from repro.continuum.session import MODES, StateSession
 from repro.continuum.storage import TwoTierStorage
 from repro.core.fusion import plan_fusion_groups
 from repro.core.keys import StateKey
-from repro.core.planner import WorkflowSpec, plan_workflow
+from repro.core.planner import WorkflowSpec, plan_workflow, undo_plan
 from repro.core.slo import SLO
 from repro.core.strategy import make_strategy
 from repro.serverless.workflow import Workflow, make_payload
 from repro.sim.autoscale import AutoscalePolicy, Autoscaler
 from repro.sim.faults import FaultInjector, FaultPlan
 from repro.sim.kernel import SimKernel
-from repro.sim.metrics import ParallelReport
+from repro.sim.metrics import FleetAggregate, ParallelReport
 from repro.sim.resources import ResourcePool
-from repro.sim.workload import UniformStagger
+from repro.sim.workload import UniformStagger, iter_arrivals
 
 SANDBOX_INIT_S = 1.0   # Knative-class cold start per sandbox; fusion packs
                        # a whole group into one sandbox and its grouped
@@ -139,6 +140,10 @@ class WorkflowEngine:
         # one resource pool per engine: CPU slots (one per core) + KVS
         # queues, shared with the storage layer so every strategy contends
         # on the same queues
+        self._cpu_slot_cache: Dict[str, int] = {}
+        # id(Workflow) -> (Workflow, WorkflowSpec); the strong ref keeps
+        # the id stable for the cache's lifetime
+        self._spec_cache: Dict[int, tuple] = {}
         self.resources = ResourcePool(cpu_capacity=self._cpu_slots)
         self.storage = TwoTierStorage(net.graph_at,
                                       resources=self.resources)
@@ -151,35 +156,49 @@ class WorkflowEngine:
         self.node_busy_until = self.resources.busy_view(ResourcePool.CPU)
 
     def _cpu_slots(self, node_id: str) -> int:
-        node = self.net.graph_at(0.0).nodes.get(node_id)
-        return max(1, int(node.cpu)) if node is not None else 1
+        # memoized: resolving the t=0 snapshot per admission both costs a
+        # dict of work and evicts the network's last-answer snapshot memo
+        slots = self._cpu_slot_cache.get(node_id)
+        if slots is None:
+            node = self.net.graph_at(0.0).nodes.get(node_id)
+            slots = max(1, int(node.cpu)) if node is not None else 1
+            self._cpu_slot_cache[node_id] = slots
+        return slots
 
     # ------------------------------------------------------------------
     def place_functions(self, wf: Workflow, t: float,
                         entry: str = "drone0") -> Dict[str, str]:
-        graph = self.net.graph_at(t).copy_shallow()
-        spec = WorkflowSpec(
-            functions=[f.name for f in wf.functions],
-            edges=wf.edges,
-            demands={f.name: f.demand for f in wf.functions},
-            state_sizes={},
-            sink_kind="cloud" if wf.sink_in_cloud else "",
-        )
-        # node resource accounting is per-plan: snapshot + restore (the
-        # workflow releases its resources when it completes)
-        snap = {nid: (n.mem_used, n.cpu_used, n.power_used, n.temp_extra)
-                for nid, n in graph.nodes.items()}
+        # plan directly on the shared snapshot: its SSSP caches stay warm
+        # across every instance planned in the same quantum (the old
+        # copy_shallow threw them away per plan).  Node resource
+        # accounting is per-plan: the undo log restores the exact prior
+        # values, so concurrent instances observe an unmutated graph.
+        graph = self.net.graph_at(t)
+        # one spec per Workflow object: every instance of the same
+        # workflow shares it, so the spec's topo-order/predecessor memos
+        # actually amortize (a fresh spec per plan re-derived them)
+        cached = self._spec_cache.get(id(wf))
+        if cached is not None and cached[0] is wf:
+            spec = cached[1]
+        else:
+            spec = WorkflowSpec(
+                functions=[f.name for f in wf.functions],
+                edges=wf.edges,
+                demands={f.name: f.demand for f in wf.functions},
+                state_sizes={},
+                sink_kind="cloud" if wf.sink_in_cloud else "",
+            )
+            self._spec_cache[id(wf)] = (wf, spec)
+        undo: list = []
         try:
             plan = plan_workflow(graph, spec, self.slo, entry_node=entry,
                                  busy=self.node_busy_until, now=t,
                                  home_nodes=self.clouds
                                  if self.multi_region else None,
-                                 region_weight=self.region_weight)
+                                 region_weight=self.region_weight,
+                                 undo_log=undo)
         finally:
-            for nid, (mu, cu, pu, te) in snap.items():
-                n = graph.nodes[nid]
-                n.mem_used, n.cpu_used, n.power_used, n.temp_extra = \
-                    mu, cu, pu, te
+            undo_plan(undo)
         return plan.placement
 
     # ------------------------------------------------------------------
@@ -194,12 +213,14 @@ class WorkflowEngine:
         wf, m, session = run.wf, run.metrics, run.session
         node = g.node_id
         need: List[StateKey] = []
+        seen_fids = set()
         for fname in g.function_ids:
             preds = wf.predecessors(fname) or ["__input__"]
             for p in preds:
-                if p in run.keys and run.keys[p].function_id not in (
-                        k.function_id for k in need):
-                    need.append(run.keys[p])
+                k = run.keys.get(p)
+                if k is not None and k.function_id not in seen_fids:
+                    seen_fids.add(k.function_id)
+                    need.append(k)
         # per-key SLO accounting uses the *network* handoff (path latency
         # + wire transfer, paper: "includes all data transfer"), and
         # skips the workflow ingress (not a function pair in E)
@@ -277,11 +298,11 @@ class WorkflowEngine:
         in_group = set(g.function_ids)
         outgoing = []
         for fname in g.function_ids:
-            consumers = [j for i, j in wf.edges if i == fname]
+            consumers = wf.successors(fname)
             if not consumers or any(c not in in_group for c in consumers):
                 outgoing.append(fname)
         for fname in g.function_ids:
-            nxt = [j for i, j in wf.edges if i == fname]
+            nxt = wf.successors(fname)
             dst = run.placement.get(nxt[0]) if nxt else None
             if dst is not None:
                 self.placer.plan_state_placement(fname, node, dst,
@@ -383,7 +404,9 @@ class WorkflowEngine:
                      entry: str = "drone0", workload=None,
                      record_trace: bool = False,
                      autoscale: Optional[AutoscalePolicy] = None,
-                     faults: Optional[FaultPlan] = None
+                     faults: Optional[FaultPlan] = None,
+                     collect: str = "full",
+                     lazy_arrivals: bool = False
                      ) -> ParallelReport:
         """n truly concurrent workflow instances on one shared event loop.
 
@@ -413,7 +436,28 @@ class WorkflowEngine:
         anything in flight, and the topology routes around down nodes so
         reads exercise the global tier's cross-region fallback.  Requires
         the event-driven engine mode; the report carries the injector's
-        actions in ``report.faults``."""
+        actions in ``report.faults``.
+
+        Scale knobs (both value-preserving opt-ins, defaults keep every
+        seeded run bit-identical to the pre-scale engine):
+
+        * ``collect="aggregate"`` folds each completing instance into a
+          running ``FleetAggregate`` (count/sum stats + P² quantile
+          sketches) instead of materializing per-instance metric lists —
+          constant memory in ``n``, the difference between a 100k run
+          fitting in RAM or not.  Event order is untouched; only the
+          bookkeeping after each completion changes.
+        * ``lazy_arrivals=True`` spawns instances from a single feeder
+          process at their arrival times instead of pre-scheduling all n
+          generators into the heap upfront — heap size and generator
+          count then track the *in-flight* population, not ``n``.  The
+          feeder's events take different sequence numbers than eager
+          pre-scheduling, so same-timestamp ties can break differently:
+          off by default, and the golden-pinned figures never enable it.
+        """
+        if collect not in ("full", "aggregate"):
+            raise ValueError(f"unknown collect mode {collect!r}; choose "
+                             f"'full' or 'aggregate'")
         if faults is not None and self.mode != "event":
             raise ValueError(
                 "fault injection needs mode='event' — analytic "
@@ -425,6 +469,7 @@ class WorkflowEngine:
         injector = FaultInjector(kernel, self.net, self.resources,
                                  faults).start() \
             if faults is not None else None
+        agg = FleetAggregate() if collect == "aggregate" else None
         results: List[tuple] = []
 
         def wrap(i: int):
@@ -435,7 +480,10 @@ class WorkflowEngine:
                 e = entry(i) if callable(entry) else entry
                 yield from self._instance_proc(kernel, wf, input_bytes,
                                                e, m)
-                results.append((i, m, start, kernel.now))
+                if agg is not None:
+                    agg.observe(m, start, kernel.now)
+                else:
+                    results.append((i, m, start, kernel.now))
                 if scaler is not None:
                     scaler.observe_latency(m.latency)
             return proc()
@@ -453,18 +501,46 @@ class WorkflowEngine:
                         if workload.think_time > 0:
                             yield workload.think_time
                 kernel.spawn(client(), label=f"client{c}")
+        elif lazy_arrivals:
+            def feeder():
+                for i, at in enumerate(iter_arrivals(workload, n, t0)):
+                    gap = at - kernel.now
+                    if gap > 0:
+                        yield gap
+                    kernel.spawn(wrap(i), label=f"wf{i}")
+            # non-daemon: the feeder itself keeps the run alive until the
+            # last instance has been spawned
+            kernel.spawn(feeder(), label="arrivals")
         else:
             for i, at in enumerate(workload.arrivals(n, t0)):
                 kernel.spawn(wrap(i), label=f"wf{i}", at=at)
 
-        kernel.run()
-        results.sort(key=lambda r: r[0])
-        return ParallelReport.build(
-            instances=[r[1] for r in results],
-            start_times=[r[2] for r in results],
-            end_times=[r[3] for r in results],
+        # The event loop allocates millions of short-lived tuples and
+        # generator frames that plain refcounting already reclaims; the
+        # cyclic collector's periodic full-heap scans over that population
+        # were >20% of a 10k-instance run's wall clock.  Pause it for the
+        # loop (values are untouched — GC never affects event order) and
+        # restore unconditionally; one collect afterwards picks up any
+        # cycles the run did make.
+        gc_was_enabled = gc.isenabled()
+        gc.disable()
+        try:
+            kernel.run()
+        finally:
+            if gc_was_enabled:
+                gc.enable()
+                gc.collect()
+        common = dict(
             pool=self.resources,
             events_processed=kernel.events_processed,
             trace=kernel.trace,
             autoscale=scaler.report() if scaler is not None else None,
             faults=injector.report() if injector is not None else None)
+        if agg is not None:
+            return ParallelReport.build_aggregate(agg, **common)
+        results.sort(key=lambda r: r[0])
+        return ParallelReport.build(
+            instances=[r[1] for r in results],
+            start_times=[r[2] for r in results],
+            end_times=[r[3] for r in results],
+            **common)

@@ -36,10 +36,60 @@ class Workflow:
     edges: List[Tuple[str, str]]
     sink_in_cloud: bool = True   # final function gravitates to the cloud
 
+    def __post_init__(self):
+        self._validate_edges()
+
+    def _validate_edges(self) -> None:
+        """Every edge endpoint must name a declared function — an edge on
+        an unknown name would otherwise surface as a bare ``KeyError``
+        deep inside ``order()`` (or silently never fire for an unknown
+        source)."""
+        names = {f.name for f in self.functions}
+        unknown = sorted({n for e in self.edges for n in e
+                          if n not in names})
+        if unknown:
+            raise ValueError(
+                f"workflow {self.workflow_id!r} has edges naming unknown "
+                f"function(s) {unknown}; declared functions: "
+                f"{sorted(names)}")
+
+    def _edge_memo(self):
+        """Memoized (predecessor lists, successor lists, fn-by-name).
+
+        Guarded on the list lengths: the dataclass is mutable, so
+        appending a function or edge rebuilds the memo (in-place element
+        replacement is not detected; no caller does that).  The engine
+        asks for the neighbors of every function once per instance — at
+        100k instances the naive per-call edge scans were a measurable
+        hot spot."""
+        guard = (len(self.functions), len(self.edges))
+        cached = self.__dict__.get("_edges_memo")
+        if cached is not None and cached[0] == guard:
+            return cached[1]
+        preds: Dict[str, List[str]] = {f.name: [] for f in self.functions}
+        succs: Dict[str, List[str]] = {f.name: [] for f in self.functions}
+        for i, j in self.edges:
+            preds.setdefault(j, []).append(i)
+            succs.setdefault(i, []).append(j)
+        byname: Dict[str, ServerlessFunction] = {}
+        for f in self.functions:
+            byname.setdefault(f.name, f)      # first match wins, like fn()
+        memo = (preds, succs, byname)
+        self.__dict__["_edges_memo"] = (guard, memo)
+        return memo
+
     def fn(self, name: str) -> ServerlessFunction:
+        f = self._edge_memo()[2].get(name)
+        if f is not None:
+            return f
         return next(f for f in self.functions if f.name == name)
 
     def order(self) -> List[str]:
+        """Topological order of the workflow DAG.  Raises ``ValueError``
+        naming the offending nodes when ``edges`` contain a cycle (a
+        truncated order would silently drop every function downstream of
+        the cycle) or reference an unknown function."""
+        self._validate_edges()
         names = [f.name for f in self.functions]
         indeg = {n: 0 for n in names}
         for _, j in self.edges:
@@ -53,10 +103,20 @@ class Workflow:
                     indeg[j] -= 1
                     if indeg[j] == 0:
                         frontier.append(j)
+        if len(out) < len(names):
+            stuck = sorted(n for n in names if n not in out)
+            raise ValueError(
+                f"workflow {self.workflow_id!r} edges contain a cycle "
+                f"through {stuck}; these functions would never execute")
         return out
 
     def predecessors(self, name: str) -> List[str]:
-        return [i for i, j in self.edges if j == name]
+        """Upstream function names, in edge order.  Read-only."""
+        return self._edge_memo()[0].get(name, [])
+
+    def successors(self, name: str) -> List[str]:
+        """Downstream function names, in edge order.  Read-only."""
+        return self._edge_memo()[1].get(name, [])
 
 
 # ---------------------------------------------------------------------------

@@ -138,16 +138,30 @@ class SimKernel:
 
     def run(self, until: Optional[float] = None) -> float:
         """Pop events in (time, seq) order until only daemon events remain
-        (or simulated time passes ``until``).  Returns the final clock."""
-        while self._heap and self._live > 0:
-            t, seq, kind, payload, label, daemon = self._heap[0]
-            if until is not None and t > until:
+        (or simulated time passes ``until``).  Returns the final clock.
+
+        With ``until`` given, the clock always advances to the end of the
+        window: ``now == max(now, until)`` on return even when no event
+        fires at ``until`` exactly.  (Pre-fix the clock stuck at the last
+        *fired* event, so daemons sampling "time at end of window"
+        observed a stale clock — pinned in ``tests/test_sim_kernel.py``.)
+
+        The loop body is the simulator's hottest path (one iteration per
+        event; a 100k-instance run is several million events), so locals
+        are bound once and the no-trace fast path skips all formatting.
+        """
+        heap = self._heap
+        pop = heapq.heappop
+        while heap and self._live > 0:
+            if until is not None and heap[0][0] > until:
                 break
-            heapq.heappop(self._heap)
+            t, seq, kind, payload, label, daemon = pop(heap)
             if not daemon:
                 self._live -= 1
-            assert t >= self.now - 1e-12, "event heap went backwards"
-            self.now = max(self.now, t)
+            if t > self.now:
+                self.now = t
+            elif t < self.now - 1e-12:
+                raise AssertionError("event heap went backwards")
             self.events_processed += 1
             if self.trace is not None:
                 self.trace.append((self.now, seq, f"fire:{label}"))
@@ -155,4 +169,6 @@ class SimKernel:
                 self._step_proc(payload, label, daemon)
             else:
                 payload()
+        if until is not None and until > self.now:
+            self.now = until
         return self.now

@@ -20,6 +20,7 @@ makes the three state strategies contend realistically.
 from __future__ import annotations
 
 import heapq
+import math
 from collections import deque
 from typing import Callable, Dict, Optional, Tuple
 
@@ -186,7 +187,17 @@ class SlotResource:
     def next_free(self) -> float:
         """Load signal for the placement planner: earliest projected
         availability.  Exact for analytic queues; for held slots a
-        saturation heuristic (last completion + pressure per waiter)."""
+        saturation heuristic (last completion + pressure per waiter).
+
+        A fully drained pool (capacity 0 — the fault injector's forced
+        node loss) projects ``inf``: with no servers there is no
+        projected availability, and the pre-fix ``0.0`` made a *drained*
+        node look like the cheapest target in the fleet the moment its
+        wait queue emptied.  The planner's busy view still overlays a
+        pending capacity grow (the scheduled restore), so a node about
+        to come back is scored by its restore time, not ``inf``."""
+        if self.capacity == 0:
+            return math.inf
         base = self._free_at[0] if self._free_at else 0.0
         if self._held >= self.capacity:
             base = max(base, self.last_busy_t) + \
@@ -251,7 +262,15 @@ class ResourcePool:
         return res
 
     def cpu(self, node: str) -> SlotResource:
-        return self._get(self.CPU, node, self._cpu_capacity(node))
+        # capacity is only consulted when the resource is first created,
+        # so the callback (which may resolve a topology snapshot) is not
+        # re-invoked on the per-admission hot path
+        key = (self.CPU, node)
+        res = self._res.get(key)
+        if res is None:
+            res = self._res[key] = SlotResource(
+                f"{self.CPU}:{node}", self._cpu_capacity(node))
+        return res
 
     def kvs(self, node: str) -> SlotResource:
         return self._get(self.KVS, node, 1)

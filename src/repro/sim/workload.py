@@ -8,13 +8,31 @@ client only issues its next workflow after the previous one completed.
 All randomness flows through a seeded ``random.Random`` so the same seed
 reproduces the identical arrival sequence (and, through the kernel's
 deterministic event order, the identical event trace).
+
+For 100k+-instance scale runs the driver consumes arrivals through
+``iter_arrivals(workload, n, start)``, which prefers a generator-based
+``iter_arrivals`` method on the workload (batched/streaming generation —
+no n-element list is ever materialized) and falls back to iterating the
+materialized ``arrivals`` list.  A streaming generator must yield exactly
+the values its ``arrivals`` would return (same arithmetic, same RNG
+sequence) so the two paths are interchangeable.
 """
 from __future__ import annotations
 
 import math
 import random
 from dataclasses import dataclass, field
-from typing import List, Tuple
+from typing import Iterator, List, Tuple
+
+
+def iter_arrivals(workload, n: int, start: float = 0.0):
+    """Arrival times of ``workload`` as an iterator, streaming when the
+    generator supports it (open-loop only; closed-loop workloads have no
+    arrival schedule)."""
+    gen = getattr(workload, "iter_arrivals", None)
+    if gen is not None:
+        return gen(n, start)
+    return iter(workload.arrivals(n, start))
 
 
 @dataclass
@@ -26,6 +44,11 @@ class UniformStagger:
     def arrivals(self, n: int, start: float = 0.0) -> List[float]:
         return [start + i * self.stagger for i in range(n)]
 
+    def iter_arrivals(self, n: int, start: float = 0.0) -> Iterator[float]:
+        """Streaming ``arrivals`` — identical values, no list."""
+        for i in range(n):
+            yield start + i * self.stagger
+
 
 @dataclass
 class OpenLoopPoisson:
@@ -35,12 +58,16 @@ class OpenLoopPoisson:
     closed = False
 
     def arrivals(self, n: int, start: float = 0.0) -> List[float]:
+        return list(self.iter_arrivals(n, start))
+
+    def iter_arrivals(self, n: int, start: float = 0.0) -> Iterator[float]:
+        """Streaming ``arrivals`` — same seeded RNG draw sequence, so the
+        values match the materialized list exactly."""
         rng = random.Random(self.seed)
-        t, out = start, []
+        t = start
         for _ in range(n):
-            out.append(t)
+            yield t
             t += rng.expovariate(self.rate)
-        return out
 
     def __hash__(self):
         return hash((self.rate, self.seed))

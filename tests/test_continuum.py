@@ -151,3 +151,44 @@ def test_total_partition_global_fallback_detour():
     assert r.network_latency == PARTITION_DETOUR_LATENCY_S
     assert r.latency >= PARTITION_DETOUR_LATENCY_S
     assert math.isfinite(r.latency)
+
+
+def test_batched_geometry_bit_identical_to_scalar():
+    """The snapshot builder's vectorized pair predicates must reproduce
+    the scalar geometry EXACTLY (same IEEE-754 results, not approx) —
+    they replaced per-pair Python loops on the hot path and any ulp of
+    drift would silently change topology snapshots and every pinned
+    figure downstream (see the batched-geometry note in orbits.py)."""
+    import numpy as np
+    from repro.continuum.orbits import (line_of_sight_batch,
+                                        propagation_latency_batch,
+                                        visible_from_ground_batch)
+    c = Constellation(n_planes=4, sats_per_plane=4)
+    site = GroundSite(math.radians(48.0), math.radians(16.5)).position(37.5)
+    for t in (0.0, 37.5, 911.25):
+        pos = [c.position(i, t) for i in range(len(c))]
+        pairs = [(i, j) for i in range(len(pos)) for j in range(len(pos))]
+        a = np.array([pos[i] for i, _ in pairs])
+        b = np.array([pos[j] for _, j in pairs])
+        los = line_of_sight_batch(a, b)
+        lat = propagation_latency_batch(a, b)
+        vis = visible_from_ground_batch(site, np.array(pos))
+        for k, (i, j) in enumerate(pairs):
+            assert bool(los[k]) == line_of_sight(pos[i], pos[j])
+            assert float(lat[k]) == propagation_latency(pos[i], pos[j])
+        for i in range(len(pos)):
+            assert bool(vis[i]) == visible_from_ground(site, pos[i])
+
+
+def test_batched_geometry_degenerate_pairs():
+    """Identical endpoints (zero-length segment) must not divide by zero
+    and must agree with the scalar predicates' True short-circuit."""
+    import numpy as np
+    from repro.continuum.orbits import (line_of_sight_batch,
+                                        visible_from_ground_batch)
+    p = Constellation(n_planes=2, sats_per_plane=2).position(0, 0.0)
+    arr = np.array([p])
+    assert bool(line_of_sight_batch(arr, arr)[0]) is True
+    assert line_of_sight(p, p) is True
+    assert bool(visible_from_ground_batch(p, arr)[0]) is True
+    assert visible_from_ground(p, p) is True

@@ -79,9 +79,27 @@ def test_kernel_run_until():
 
     kernel.spawn(proc(), label="p")
     kernel.run(until=5.0)
-    assert kernel.now == 1.0          # the t=11 resumption stays queued
-    kernel.run()
+    # the clock advances to the END of the window even though the last
+    # event fired at t=1 (pre-fix it stuck at 1.0, so anything sampling
+    # "time at end of window" observed a stale clock)
+    assert kernel.now == 5.0
+    kernel.run()                      # the t=11 resumption stayed queued
     assert kernel.now == 11.0
+
+
+def test_kernel_run_until_advances_clock_without_events():
+    kernel = SimKernel()
+    assert kernel.run(until=3.5) == 3.5     # empty heap: pure time advance
+    assert kernel.now == 3.5
+
+    def proc():
+        yield 1.0
+
+    kernel.spawn(proc(), label="p")
+    assert kernel.run(until=2.0) == 3.5     # until in the past: no-op,
+    assert kernel.now == 3.5                # the clock never goes back
+    kernel.run()
+    assert kernel.now == 4.5
 
 
 # ---------------------------------------------------------------------------
