@@ -1,0 +1,31 @@
+"""``repro.analysis`` — databelt-lint: the determinism & replay-invariant
+analyzer.
+
+Static half: an AST pass over the simulator packages reporting typed
+``DB0xx`` findings (wall-clock reads, unseeded RNG, unordered iteration,
+id()-keyed memos, kernel-protocol violations, version-guard breaches,
+slot leaks) with file:line, a fix hint, a ``# repro: allow(DBxxx): why``
+suppression pragma and a module allowlist.  Runnable and CI-gated::
+
+    PYTHONPATH=src python -m repro.analysis src/ --strict
+
+Runtime half: ``repro.analysis.replay`` — trace diffing +
+``Scenario.verify_replay()``, which runs a spec twice and reports the
+*first divergent event* instead of a bare goldens mismatch.
+"""
+from repro.analysis.config import (AnalysisConfig, CHECK_CATALOG,
+                                   default_config)
+from repro.analysis.framework import (CHECKERS, Checker, Finding,
+                                      ModuleUnit, analyze_source,
+                                      register_checker, run_analysis)
+# importing the checker modules registers them
+from repro.analysis import cache as _cache              # noqa: F401
+from repro.analysis import determinism as _determinism  # noqa: F401
+from repro.analysis import protocol as _protocol        # noqa: F401
+from repro.analysis.replay import ReplayCheck, diff_traces, verify_scenario
+
+__all__ = [
+    "AnalysisConfig", "CHECK_CATALOG", "CHECKERS", "Checker", "Finding",
+    "ModuleUnit", "ReplayCheck", "analyze_source", "default_config",
+    "diff_traces", "register_checker", "run_analysis", "verify_scenario",
+]

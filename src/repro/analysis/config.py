@@ -1,0 +1,168 @@
+"""Configuration for the databelt-lint determinism analyzer.
+
+The analyzer's behavior is data-driven: which modules each check applies
+to, which modules are *allowlisted* (legitimately wall-clock, like the
+compile-measurement harness), and which classes carry a version-guarded
+memo discipline.  ``DEFAULT_CONFIG`` encodes today's repo layout; a JSON
+file with the same field names can override any of it
+(``python -m repro.analysis src/ --config my.json``).
+
+Scope patterns are ``fnmatch`` globs over *dotted module names*
+(``repro.sim.kernel``).  Files that do not live under a ``repro``
+package (e.g. fixture snippets in a test tmpdir) match every scope —
+the analyzer is a determinism gate for this repo, not a general linter,
+so unknown files get the full battery.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from fnmatch import fnmatch
+from typing import Dict, List, Optional, Tuple
+
+#: every check code the analyzer knows, with its one-line charter.
+CHECK_CATALOG: Dict[str, str] = {
+    "DB001": "wall-clock read inside deterministic simulator code",
+    "DB002": "unseeded RNG (module-level np.random / bare random.*)",
+    "DB003": "iteration over a set feeding event order without sorted()",
+    "DB004": "id()-keyed memo without a paired strong ref or identity "
+             "guard",
+    "DB005": "kernel-process protocol violation (unknown effect op / "
+             "blocking builtin in a process generator)",
+    "DB006": "version-guarded class mutates cached state without bumping "
+             "the version (or reads a memo without the version check)",
+    "DB007": "SlotResource acquire without a matching release",
+}
+
+
+@dataclass
+class VersionedClass:
+    """DB006 description of one version-guarded class."""
+    name: str
+    #: attributes whose structural mutation must bump the version
+    guarded_attrs: Tuple[str, ...]
+    #: attribute name of the version counter ("" when the class
+    #: invalidates through a method instead)
+    version_attr: str = "_version"
+    #: method names that perform the invalidation (calling one of these
+    #: counts as bumping the version)
+    invalidate_methods: Tuple[str, ...] = ()
+    #: memo attributes whose reads must consult the version counter
+    memo_attrs: Tuple[str, ...] = ()
+    #: methods exempt from both rules (constructors, the invalidators
+    #: themselves, fresh-object builders)
+    exempt_methods: Tuple[str, ...] = ("__init__",)
+
+
+@dataclass
+class AnalysisConfig:
+    #: check code -> list of module globs it applies to (["*"] = all)
+    scopes: Dict[str, List[str]] = field(default_factory=dict)
+    #: module glob -> check codes allowlisted there (module-level
+    #: suppression for legitimately wall-clock / nondeterministic code)
+    allowlist: Dict[str, List[str]] = field(default_factory=dict)
+    #: DB006 class inventory
+    versioned_classes: List[VersionedClass] = field(default_factory=list)
+    #: DB005 known effect ops a kernel process may yield
+    known_ops: Tuple[str, ...] = ("acquire", "release")
+    #: DB005 blocking calls a process generator must never make
+    blocking_calls: Tuple[str, ...] = (
+        "time.sleep", "open", "input", "socket.socket",
+        "subprocess.run", "subprocess.Popen", "os.system")
+
+    # ------------------------------------------------------------------
+    def scope_for(self, code: str) -> List[str]:
+        return self.scopes.get(code, ["*"])
+
+    def applies(self, code: str, module: Optional[str]) -> bool:
+        """Does ``code`` apply to ``module``?  ``module=None`` (a file
+        outside any repro package) matches every scope."""
+        if module is None:
+            return True
+        return any(fnmatch(module, pat) for pat in self.scope_for(code))
+
+    def allowlisted(self, code: str, module: Optional[str]) -> bool:
+        if module is None:
+            return False
+        for pat, codes in self.allowlist.items():
+            if fnmatch(module, pat) and code in codes:
+                return True
+        return False
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_json(cls, path: str) -> "AnalysisConfig":
+        with open(path) as f:
+            d = json.load(f)
+        vcs = [VersionedClass(
+            name=v["name"],
+            guarded_attrs=tuple(v.get("guarded_attrs", ())),
+            version_attr=v.get("version_attr", "_version"),
+            invalidate_methods=tuple(v.get("invalidate_methods", ())),
+            memo_attrs=tuple(v.get("memo_attrs", ())),
+            exempt_methods=tuple(v.get("exempt_methods", ("__init__",))),
+        ) for v in d.get("versioned_classes", [])]
+        base = default_config()
+        return cls(
+            scopes={**base.scopes, **d.get("scopes", {})},
+            allowlist={**base.allowlist, **d.get("allowlist", {})},
+            versioned_classes=vcs or base.versioned_classes,
+            known_ops=tuple(d.get("known_ops", base.known_ops)),
+            blocking_calls=tuple(d.get("blocking_calls",
+                                       base.blocking_calls)),
+        )
+
+
+#: module globs of the deterministic simulator core: everything the
+#: replayed event loop touches.
+DETERMINISTIC_SCOPE = [
+    "repro.sim*", "repro.serverless*", "repro.continuum*",
+    "repro.core*", "repro.scenario*",
+]
+
+
+def default_config() -> AnalysisConfig:
+    return AnalysisConfig(
+        scopes={
+            # wall-clock & RNG hygiene applies repo-wide (the allowlist
+            # below carves out the measurement harnesses)
+            "DB001": ["*"],
+            "DB002": ["*"],
+            # unordered iteration only matters where it can feed the
+            # event heap
+            "DB003": ["repro.sim*", "repro.serverless*"],
+            "DB004": ["*"],
+            "DB005": DETERMINISTIC_SCOPE,
+            "DB006": ["*"],
+            "DB007": ["*"],
+        },
+        allowlist={
+            # compile/measurement harness: lower+compile timings are
+            # real wall time by design, never on a replayed path
+            "repro.launch.*": ["DB001"],
+            # checkpoint metadata records the wall-clock write time —
+            # the one legitimately wall-clock field in the repo
+            "repro.checkpoint.*": ["DB001"],
+            # training-loop step timing measures the actual hardware
+            "repro.train.*": ["DB001"],
+        },
+        versioned_classes=[
+            VersionedClass(
+                name="TopologyGraph",
+                guarded_attrs=("nodes", "adj"),
+                version_attr="_version",
+                memo_attrs=("_sssp", "_paths", "_nearest", "_vicinity",
+                            "_hops", "_kind_ids", "_pathcost", "_prefix"),
+                exempt_methods=("__init__", "copy_shallow"),
+            ),
+            VersionedClass(
+                name="ContinuumNetwork",
+                guarded_attrs=("_down_nodes", "_down_links"),
+                version_attr="",
+                invalidate_methods=("_invalidate",),
+                memo_attrs=(),
+                exempt_methods=("__init__", "_invalidate",
+                                "_make_nodes"),
+            ),
+        ],
+    )

@@ -1,0 +1,183 @@
+"""Determinism checkers: DB001 wall-clock reads, DB002 unseeded RNG,
+DB003 unordered-set iteration feeding event order.
+
+Replay of the discrete-event kernel is bit-identical only while every
+quantity an event computes is a pure function of (seed, spec, simulated
+time).  These three checkers guard the classic leaks: the host's clock,
+process-global RNG state, and Python set iteration order (which hashes
+object addresses for non-str keys and is therefore run-dependent).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.framework import (Checker, Finding, ModuleUnit,
+                                      register_checker)
+
+#: dotted call targets that read a host clock.  perf_counter/monotonic
+#: are included on purpose: *any* host-clock read inside replayed code
+#: makes results machine-dependent, monotonic or not.
+WALL_CLOCK_CALLS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today", "datetime.now",
+    "datetime.utcnow",
+}
+
+#: attribute calls on the random module that are process-global (seeded,
+#: if at all, far from the call site).  Constructing a seeded generator
+#: is the sanctioned pattern and stays clean.
+_RANDOM_SAFE = {"Random", "SystemRandom", "getstate", "setstate"}
+_NP_RANDOM_SAFE = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                   "Philox", "SFC64", "BitGenerator", "RandomState"}
+
+
+@register_checker
+class WallClockChecker(Checker):
+    """DB001 — host-clock reads inside deterministic simulator code."""
+
+    CODE = "DB001"
+    HINT = ("simulated time is SimKernel.now; for real measurement "
+            "harnesses add the module to the DB001 allowlist or suppress "
+            "with '# repro: allow(DB001): <why>'")
+
+    def check(self, unit: ModuleUnit) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(unit.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = unit.resolve_call(node.func)
+            if target in WALL_CLOCK_CALLS:
+                out.append(self.finding(
+                    unit, node,
+                    f"wall-clock read `{target}()` in deterministic "
+                    f"scope — replay will not be bit-identical"))
+        return out
+
+
+@register_checker
+class UnseededRngChecker(Checker):
+    """DB002 — draws from process-global RNG state."""
+
+    CODE = "DB002"
+    HINT = ("draw from a seeded generator: random.Random(seed) / "
+            "np.random.default_rng(seed) threaded from the scenario "
+            "seed")
+
+    def check(self, unit: ModuleUnit) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(unit.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = unit.resolve_call(node.func)
+            if target is None:
+                continue
+            if target.startswith("numpy.random.") or \
+                    target.startswith("np.random."):
+                attr = target.rsplit(".", 1)[-1]
+                if attr not in _NP_RANDOM_SAFE:
+                    out.append(self.finding(
+                        unit, node,
+                        f"module-level numpy RNG `{target}()` — global "
+                        f"state is shared across every run in the "
+                        f"process"))
+            elif target.startswith("random."):
+                attr = target.split(".", 1)[1]
+                if "." not in attr and attr not in _RANDOM_SAFE:
+                    out.append(self.finding(
+                        unit, node,
+                        f"bare `random.{attr}()` — draws from the "
+                        f"process-global generator, not a seeded "
+                        f"stream"))
+        return out
+
+
+def _returns_set(node: ast.expr, set_vars: Set[str]) -> bool:
+    """Is ``node`` a set-typed expression?  Literal sets, set/frozenset
+    constructors and comprehensions, set-algebra method calls, and
+    names locally assigned one of those."""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in set_vars
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Name) and \
+                node.func.id in ("set", "frozenset"):
+            return True
+        if isinstance(node.func, ast.Attribute) and node.func.attr in (
+                "union", "intersection", "difference",
+                "symmetric_difference"):
+            # set-algebra producing another unordered set; only treat as
+            # set-typed when the receiver already is one (dict.keys()
+            # has no such methods, str methods named union don't exist)
+            return _returns_set(node.func.value, set_vars)
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+        return _returns_set(node.left, set_vars) or \
+            _returns_set(node.right, set_vars)
+    return False
+
+
+@register_checker
+class UnorderedIterationChecker(Checker):
+    """DB003 — iterating a set (insertion-order-free) in event-feeding
+    code without ``sorted``.
+
+    Dict iteration is insertion-ordered and therefore replay-stable;
+    *set* iteration orders by hash, which for object elements includes
+    the allocation address — two runs of the same seed can schedule in
+    different orders.  Scope is the event-feeding packages
+    (``repro.sim``, ``repro.serverless``) where that order reaches the
+    heap.
+    """
+
+    CODE = "DB003"
+    HINT = "iterate `sorted(<set>)` (or keep a list alongside the set)"
+
+    def check(self, unit: ModuleUnit) -> List[Finding]:
+        out: List[Finding] = []
+        # one pass per scope (module body + every function), never
+        # descending into nested scopes: set-typed inference is local,
+        # so a set-typed `names` in one method cannot taint a list-typed
+        # `names` in another
+        scopes = [unit.tree] + [
+            n for n in ast.walk(unit.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        for scope in scopes:
+            nodes = list(self._walk_scope(scope))
+            set_vars: Set[str] = set()
+            for stmt in nodes:
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                        and isinstance(stmt.targets[0], ast.Name) \
+                        and _returns_set(stmt.value, set_vars):
+                    set_vars.add(stmt.targets[0].id)
+            for node in nodes:
+                iters = []
+                if isinstance(node, ast.For):
+                    iters.append(node.iter)
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.GeneratorExp, ast.DictComp)):
+                    iters.extend(g.iter for g in node.generators)
+                for it in iters:
+                    if _returns_set(it, set_vars):
+                        out.append(self.finding(
+                            unit, it,
+                            "iteration over a set — element order "
+                            "hashes object addresses and is not "
+                            "replay-stable"))
+        return out
+
+    @staticmethod
+    def _walk_scope(scope):
+        """Walk one scope's statements without entering nested function
+        or class bodies (those are scopes of their own)."""
+        stack = list(scope.body)
+        while stack:
+            node = stack.pop()
+            yield node
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef, ast.Lambda)):
+                continue
+            stack.extend(ast.iter_child_nodes(node))

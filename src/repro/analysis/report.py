@@ -1,0 +1,42 @@
+"""Finding presentation + exit-code policy for databelt-lint."""
+from __future__ import annotations
+
+from collections import Counter
+from typing import List
+
+from repro.analysis.config import CHECK_CATALOG
+from repro.analysis.framework import Finding
+
+
+def active(findings: List[Finding]) -> List[Finding]:
+    """Findings that gate a merge: neither suppressed nor allowlisted."""
+    return [f for f in findings if not f.suppressed and not f.allowlisted]
+
+
+def render(findings: List[Finding], show_suppressed: bool = False) -> str:
+    lines: List[str] = []
+    shown = findings if show_suppressed else active(findings)
+    for f in shown:
+        lines.append(f.format())
+    counts = Counter(f.code for f in active(findings))
+    muted = len(findings) - len(active(findings))
+    if counts:
+        per = ", ".join(f"{c}x{n}" for c, n in sorted(counts.items()))
+        lines.append(f"\ndatabelt-lint: {sum(counts.values())} "
+                     f"finding(s) [{per}]"
+                     + (f", {muted} suppressed/allowlisted" if muted
+                        else ""))
+    else:
+        lines.append(f"databelt-lint: clean"
+                     + (f" ({muted} suppressed/allowlisted)" if muted
+                        else ""))
+    return "\n".join(lines)
+
+
+def render_catalog() -> str:
+    return "\n".join(f"{code}  {desc}"
+                     for code, desc in sorted(CHECK_CATALOG.items()))
+
+
+def exit_code(findings: List[Finding]) -> int:
+    return 1 if active(findings) else 0

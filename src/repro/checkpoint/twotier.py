@@ -66,6 +66,9 @@ class TwoTierCheckpoint:
         tmp = tier / f"step{step:08d}.tmp"
         final = tier / f"step{step:08d}.ckpt"
         with open(tmp, "wb") as f:
+            # wall-clock timestamp is checkpoint *metadata* (operator
+            # forensics), never replayed math — repro.checkpoint.* is on
+            # databelt-lint's DB001 allowlist for exactly this line
             pickle.dump({"leaves": leaves, "treedef_repr": str(treedef),
                          "step": step, "time": time.time()}, f,
                         protocol=4)

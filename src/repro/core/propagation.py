@@ -51,8 +51,14 @@ def _prune(graph: TopologyGraph, keep) -> TopologyGraph:
     return pruned
 
 
-# pruned-graph memo: snapshot graph -> ((version, id(available)), pruned).
+# pruned-graph memo: snapshot graph -> (version, availability fn, pruned).
 # WeakKey so retired snapshots (and their pruned graphs) are collectable.
+# The entry holds the availability callable itself (a strong ref for the
+# entry's lifetime) and hits re-validate it by identity — the previous
+# ``id(available)`` key could alias a *new* policy allocated at a dead
+# one's address after GC and serve its pruning (the bug DB004 in
+# ``repro.analysis`` exists to catch; regression-pinned in
+# ``tests/test_core_databelt.py``).
 _IDENTIFY_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
@@ -70,15 +76,16 @@ def identify_cached(graph: TopologyGraph,
     per-op node election from an O(V+E) rebuild + cold Dijkstra into a
     dictionary hit (the single hottest path of a 100k-instance run).
 
-    The entry is keyed on ``graph._version`` (any structural mutation
-    invalidates) and ``id(available)`` (a different availability policy
-    — e.g. another strategy instance holding its own bound method —
-    never sees a stale pruning); fault drains/restores swap in a new
-    snapshot object, so they miss the cache naturally."""
-    key = (graph._version, id(available))
+    The entry is guarded on ``graph._version`` (any structural mutation
+    invalidates) and on the availability callable's *identity* (a
+    different availability policy — e.g. another strategy instance
+    holding its own bound method — never sees a stale pruning); fault
+    drains/restores swap in a new snapshot object, so they miss the
+    cache naturally."""
     hit = _IDENTIFY_CACHE.get(graph)
-    if hit is not None and hit[0] == key:
-        return hit[1]
+    if hit is not None and hit[0] == graph._version \
+            and hit[1] is available:
+        return hit[2]
     keep = [nid for nid in graph.nodes if available(nid, t)]
     if len(keep) == len(graph.nodes):
         # nothing to prune: the pruned graph would be structurally
@@ -88,7 +95,7 @@ def identify_cached(graph: TopologyGraph,
         pruned = graph
     else:
         pruned = _prune(graph, keep)
-    _IDENTIFY_CACHE[graph] = (key, pruned)
+    _IDENTIFY_CACHE[graph] = (graph._version, available, pruned)
     return pruned
 
 

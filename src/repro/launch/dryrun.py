@@ -138,7 +138,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
            "mesh": "multipod" if multi_pod else "pod",
            "kind": shape.kind, "tag": tag,
            "n_chips": mesh.devices.size}
-    t0 = time.time()
+    t0 = time.perf_counter()
     with dctx.use_rules(rules):
         fn, abstract, in_sh, out_sh, donate = build_cell(cfg, shape, mesh,
                                                          rules,
@@ -146,10 +146,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=donate)
         lowered = jitted.lower(*abstract)
-        rec["lower_s"] = round(time.time() - t0, 2)
-        t1 = time.time()
+        rec["lower_s"] = round(time.perf_counter() - t0, 2)
+        t1 = time.perf_counter()
         compiled = lowered.compile()
-        rec["compile_s"] = round(time.time() - t1, 2)
+        rec["compile_s"] = round(time.perf_counter() - t1, 2)
 
     ma = compiled.memory_analysis()
     rec["memory"] = {

@@ -296,6 +296,16 @@ class Scenario:
                 collect=self.collect, lazy_arrivals=self.lazy_arrivals)
         return ScenarioReport(scenario=self, rep=rep)
 
+    def verify_replay(self):
+        """Runtime replay sanitizer: run this spec twice with tracing on
+        and diff the event traces.  Returns a
+        ``repro.analysis.replay.ReplayCheck`` whose ``divergence`` (if
+        any) localizes the *first* event where the two runs disagree —
+        time, label, payload digest — which is usually within a few
+        events of the nondeterministic read itself."""
+        from repro.analysis.replay import verify_scenario
+        return verify_scenario(self)
+
     # -- serialization ---------------------------------------------------
     @property
     def strategy_name(self) -> str:

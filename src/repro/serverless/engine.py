@@ -280,9 +280,13 @@ class WorkflowEngine:
                     pl = run.payloads.get(p)
                     if isinstance(pl, dict):
                         merged.update(pl)
-                w0 = _time.perf_counter()
+                # repro: allow(DB001): real_compute=True folds the JAX
+                # body's actual wall time into simulated compute time —
+                # a documented nondeterminism opt-in (off for every
+                # golden-pinned figure)
+                w0 = _time.perf_counter()   # repro: allow(DB001): see above
                 run.payloads[fname] = fn.compute(merged) if merged else {}
-                ct += _time.perf_counter() - w0
+                ct += _time.perf_counter() - w0  # repro: allow(DB001): see above
             m.compute_time += ct
             yield ct
             run.sizes[fname] = in_bytes * fn.out_ratio

@@ -32,8 +32,9 @@ Determinism rules (guarded, not assumed):
 """
 from __future__ import annotations
 
+import hashlib
 import heapq
-from typing import Callable, Generator, List, Optional, Tuple
+from typing import Callable, Generator, List, Optional, Tuple, Union
 
 Trace = List[Tuple[float, int, str]]
 
@@ -41,14 +42,41 @@ Trace = List[Tuple[float, int, str]]
 class SimKernel:
     """Event-heap scheduler driving generator processes in simulated time."""
 
-    def __init__(self, start: float = 0.0, record_trace: bool = False):
+    def __init__(self, start: float = 0.0,
+                 record_trace: Union[bool, str] = False):
         self.now = float(start)
         self._heap: list = []          # (time, seq, kind, payload, label,
                                        #  daemon)
         self._seq = 0
         self._live = 0                 # non-daemon events in the heap
         self.events_processed = 0
-        self.trace: Optional[Trace] = [] if record_trace else None
+        # record_trace=True keeps the full (time, seq, label) list;
+        # record_trace="hash" folds every entry into a streaming digest
+        # instead (O(1) memory — the replay sanitizer's big-run mode).
+        # Both feed ``trace_hash()`` with identical encodings, so a
+        # hash-mode run can be compared against a recorded one.
+        self.trace: Optional[Trace] = [] if record_trace is True else None
+        self._hash = hashlib.blake2b(digest_size=16) \
+            if record_trace == "hash" else None
+        self._tracing = self.trace is not None or self._hash is not None
+
+    def _note(self, t: float, seq: int, label: str) -> None:
+        if self.trace is not None:
+            self.trace.append((t, seq, label))
+        else:
+            self._hash.update(f"{t!r}|{seq}|{label}\n".encode())
+
+    def trace_hash(self) -> Optional[str]:
+        """Digest of the event trace so far (hex).  Identical encoding
+        for both trace modes; None when tracing is off."""
+        if self.trace is not None:
+            h = hashlib.blake2b(digest_size=16)
+            for t, seq, label in self.trace:
+                h.update(f"{t!r}|{seq}|{label}\n".encode())
+            return h.hexdigest()
+        if self._hash is not None:
+            return self._hash.hexdigest()
+        return None
 
     # -- scheduling ------------------------------------------------------
     def _push(self, t: float, kind: str, payload, label: str,
@@ -61,8 +89,8 @@ class SimKernel:
                                     daemon))
         if not daemon:
             self._live += 1
-        if self.trace is not None:
-            self.trace.append((t, self._seq, f"schedule:{label}"))
+        if self._tracing:
+            self._note(t, self._seq, f"schedule:{label}")
 
     def call_at(self, t: float, fn: Callable[[], None],
                 label: str = "call") -> None:
@@ -89,9 +117,9 @@ class SimKernel:
 
     def log(self, label: str) -> None:
         """Record a named point-event in the trace at the current time."""
-        if self.trace is not None:
+        if self._tracing:
             self._seq += 1
-            self.trace.append((self.now, self._seq, label))
+            self._note(self.now, self._seq, label)
 
     # -- driving ---------------------------------------------------------
     def _step_proc(self, proc: Generator, label: str, daemon: bool = False):
@@ -109,21 +137,21 @@ class SimKernel:
                     f"resources (yielded {op!r})")
             if op == "acquire":
                 if res.hold(self.now):
-                    if self.trace is not None:
+                    if self._tracing:
                         self.log(f"grant:{label}@{res.name}")
                     self._push(self.now, "proc", proc, label, daemon=daemon)
                 else:
                     res.enqueue_waiter(proc, label, self.now)
-                    if self.trace is not None:
+                    if self._tracing:
                         self.log(f"wait:{label}@{res.name}")
                 return
             if op == "release":
-                if self.trace is not None:
+                if self._tracing:
                     self.log(f"free:{label}@{res.name}")
                 woken = res.unhold(self.now)
                 if woken is not None:
                     wproc, wlabel = woken
-                    if self.trace is not None:
+                    if self._tracing:
                         self.log(f"grant:{wlabel}@{res.name}")
                     self._push(self.now, "proc", wproc, wlabel)
                 self._push(self.now, "proc", proc, label, daemon=daemon)
@@ -163,8 +191,8 @@ class SimKernel:
             elif t < self.now - 1e-12:
                 raise AssertionError("event heap went backwards")
             self.events_processed += 1
-            if self.trace is not None:
-                self.trace.append((self.now, seq, f"fire:{label}"))
+            if self._tracing:
+                self._note(self.now, seq, f"fire:{label}")
             if kind == "proc":
                 self._step_proc(payload, label, daemon)
             else:

@@ -1,0 +1,413 @@
+"""databelt-lint (repro.analysis) — per-check fixtures, suppression
+mechanics, and the tier-1 pin that the shipped tree stays clean.
+
+Every DB0xx check gets one flagging and one clean snippet, analyzed
+through ``analyze_source`` with ``module=None`` (fixture files match
+every scope, so the full battery applies).
+"""
+import textwrap
+
+import pytest
+
+from repro.analysis import (AnalysisConfig, CHECK_CATALOG, analyze_source,
+                            default_config, run_analysis)
+from repro.analysis.report import active, exit_code, render
+
+
+def findings_for(src, code=None, module=None, config=None):
+    out = analyze_source(textwrap.dedent(src), module=module,
+                         config=config)
+    if code is not None:
+        out = [f for f in out if f.code == code]
+    return out
+
+
+def active_for(src, code=None, module=None, config=None):
+    return [f for f in findings_for(src, code, module, config)
+            if not f.suppressed and not f.allowlisted]
+
+
+# ---------------------------------------------------------------------------
+# DB001 — wall-clock reads
+# ---------------------------------------------------------------------------
+def test_db001_flags_wall_clock():
+    fs = active_for("""
+        import time
+        def sample():
+            return time.time()
+    """, "DB001")
+    assert len(fs) == 1
+    assert "time.time" in fs[0].message
+    assert fs[0].line == 4
+
+
+def test_db001_resolves_import_aliases():
+    fs = active_for("""
+        import time as _t
+        def sample():
+            return _t.perf_counter()
+    """, "DB001")
+    assert len(fs) == 1
+    assert "time.perf_counter" in fs[0].message
+
+
+def test_db001_clean_on_simulated_time():
+    assert active_for("""
+        def sample(kernel):
+            return kernel.now
+    """, "DB001") == []
+
+
+# ---------------------------------------------------------------------------
+# DB002 — unseeded RNG
+# ---------------------------------------------------------------------------
+def test_db002_flags_global_rng():
+    fs = active_for("""
+        import random
+        def jitter():
+            return random.random() + random.gauss(0, 1)
+    """, "DB002")
+    assert len(fs) == 2
+
+
+def test_db002_flags_numpy_global():
+    fs = active_for("""
+        import numpy as np
+        def jitter():
+            return np.random.rand(3)
+    """, "DB002")
+    assert len(fs) == 1
+
+
+def test_db002_clean_on_seeded_generators():
+    assert active_for("""
+        import random
+        import numpy as np
+        def jitter(seed):
+            rng = random.Random(seed)
+            g = np.random.default_rng(seed)
+            return rng.random() + g.standard_normal()
+    """, "DB002") == []
+
+
+# ---------------------------------------------------------------------------
+# DB003 — unordered set iteration
+# ---------------------------------------------------------------------------
+def test_db003_flags_set_iteration():
+    fs = active_for("""
+        def schedule(kernel, procs):
+            pending = set(procs)
+            for p in pending:
+                kernel.spawn(p)
+    """, "DB003")
+    assert len(fs) == 1
+
+
+def test_db003_flags_set_algebra():
+    fs = active_for("""
+        def schedule(a, b):
+            live = set(a)
+            out = [x for x in live - set(b)]
+            return out
+    """, "DB003")
+    assert len(fs) == 1
+
+
+def test_db003_clean_on_sorted_and_lists():
+    assert active_for("""
+        def schedule(kernel, procs):
+            pending = set(procs)
+            for p in sorted(pending):
+                kernel.spawn(p)
+            for q in list(procs):
+                kernel.spawn(q)
+    """, "DB003") == []
+
+
+def test_db003_set_inference_is_scope_local():
+    # a set-typed `names` in one method must not taint a list-typed
+    # `names` in a sibling (the workflow.py false positive)
+    assert active_for("""
+        class W:
+            def validate(self):
+                names = {f.name for f in self.fns}
+                return len(names)
+            def order(self):
+                names = [f.name for f in self.fns]
+                return [n for n in names]
+    """, "DB003") == []
+
+
+def test_db003_scoped_to_event_feeding_packages():
+    src = """
+        def walk(items):
+            for x in set(items):
+                print(x)
+    """
+    assert active_for(src, "DB003", module="repro.sim.kernel")
+    assert active_for(src, "DB003", module="repro.core.topology") == []
+
+
+# ---------------------------------------------------------------------------
+# DB004 — id()-keyed memos
+# ---------------------------------------------------------------------------
+#: the pre-fix ``core/propagation.py`` memo, verbatim shape: id()-keyed,
+#: nothing pinning the callable alive, no identity re-check on hits.
+PREFIX_PROPAGATION = """
+    _IDENTIFY_CACHE = {}
+
+    def identify_cached(graph, available, t):
+        key = (id(available), graph._version)
+        hit = _IDENTIFY_CACHE.get(key)
+        if hit is not None:
+            return hit
+        keep = [n for n in graph.nodes if available(n, t)]
+        pruned = _prune(graph, keep)
+        _IDENTIFY_CACHE[key] = pruned
+        return pruned
+"""
+
+
+def test_db004_fires_on_prefix_propagation_memo():
+    fs = active_for(PREFIX_PROPAGATION, "DB004")
+    assert len(fs) == 1
+    assert "alias" in fs[0].message
+
+
+def test_db004_clean_with_paired_strong_ref():
+    assert active_for("""
+        _CACHE = {}
+
+        def memo(graph, available):
+            _CACHE[id(available)] = (available, prune(graph))
+            return _CACHE[id(available)][1]
+    """, "DB004") == []
+
+
+def test_db004_clean_with_identity_guard():
+    assert active_for("""
+        _CACHE = {}
+
+        def memo(graph, available):
+            hit = _CACHE.get(id(available))
+            if hit is not None and hit[0] is available:
+                return hit[1]
+            return prune(graph)
+    """, "DB004") == []
+
+
+# ---------------------------------------------------------------------------
+# DB005 — kernel-process protocol
+# ---------------------------------------------------------------------------
+def test_db005_flags_unknown_effect_op():
+    fs = active_for("""
+        def proc(res):
+            yield ("aquire", res)
+            yield ("release", res)
+    """, "DB005")
+    assert len(fs) == 1
+    assert "aquire" in fs[0].message
+
+
+def test_db005_flags_blocking_builtin_in_process():
+    fs = active_for("""
+        import time
+        def proc():
+            time.sleep(1.0)
+            yield 0.5
+    """, "DB005")
+    assert len(fs) == 1
+    assert "time.sleep" in fs[0].message
+
+
+def test_db005_clean_on_well_formed_process():
+    assert active_for("""
+        def proc(res):
+            yield 1.5
+            yield ("acquire", res)
+            yield 0.1
+            yield ("release", res)
+    """, "DB005") == []
+
+
+def test_db005_ignores_non_generators():
+    # time.sleep outside a process generator is DB001's (and the
+    # allowlist's) business, not a protocol violation
+    assert active_for("""
+        import time
+        def not_a_process():
+            time.sleep(1.0)
+    """, "DB005") == []
+
+
+# ---------------------------------------------------------------------------
+# DB006 — version-guard discipline
+# ---------------------------------------------------------------------------
+def test_db006_flags_mutation_without_bump():
+    fs = active_for("""
+        class TopologyGraph:
+            def add_node(self, n):
+                self.nodes[n.node_id] = n
+    """, "DB006")
+    assert len(fs) == 1
+    assert "without bumping" in fs[0].message
+
+
+def test_db006_flags_memo_read_without_version_check():
+    fs = active_for("""
+        class TopologyGraph:
+            def sssp(self, src):
+                hit = self._sssp.get(src)
+                if hit is not None:
+                    return hit
+                return self._dijkstra(src)
+    """, "DB006")
+    assert len(fs) == 1
+    assert "_version" in fs[0].message
+
+
+def test_db006_clean_with_bump_and_check():
+    assert active_for("""
+        class TopologyGraph:
+            def add_node(self, n):
+                self.nodes[n.node_id] = n
+                self._version += 1
+            def sssp(self, src):
+                hit = self._sssp.get(src)
+                if hit is not None and hit[0] == self._version:
+                    return hit[1]
+                return self._dijkstra(src)
+    """, "DB006") == []
+
+
+def test_db006_only_checks_configured_classes():
+    assert active_for("""
+        class Scratchpad:
+            def add_node(self, n):
+                self.nodes[n.node_id] = n
+    """, "DB006") == []
+
+
+# ---------------------------------------------------------------------------
+# DB007 — slot acquire/release pairing
+# ---------------------------------------------------------------------------
+def test_db007_flags_leaked_acquire():
+    fs = active_for("""
+        def proc(res):
+            yield ("acquire", res)
+            yield 1.0
+    """, "DB007")
+    assert len(fs) == 1
+    assert "leaks" in fs[0].message
+
+
+def test_db007_clean_on_paired_slots():
+    assert active_for("""
+        def proc(a, b):
+            yield ("acquire", a)
+            yield ("acquire", b)
+            yield 1.0
+            yield ("release", b)
+            yield ("release", a)
+    """, "DB007") == []
+
+
+# ---------------------------------------------------------------------------
+# suppression pragma + allowlist mechanics
+# ---------------------------------------------------------------------------
+def test_pragma_suppresses_same_line():
+    fs = findings_for("""
+        import time
+        def sample():
+            return time.time()  # repro: allow(DB001): fixture
+    """, "DB001")
+    assert len(fs) == 1 and fs[0].suppressed
+
+
+def test_pragma_on_comment_line_suppresses_next_code_line():
+    fs = findings_for("""
+        import time
+        def sample():
+            # repro: allow(DB001): fixture
+            return time.time()
+    """, "DB001")
+    assert len(fs) == 1 and fs[0].suppressed
+
+
+def test_pragma_is_code_specific():
+    fs = findings_for("""
+        import time
+        def sample():
+            return time.time()  # repro: allow(DB002): wrong code
+    """, "DB001")
+    assert len(fs) == 1 and not fs[0].suppressed
+
+
+def test_allowlist_marks_but_keeps_findings():
+    fs = findings_for("""
+        import time
+        def stamp():
+            return time.time()
+    """, "DB001", module="repro.launch.dryrun")
+    assert len(fs) == 1 and fs[0].allowlisted
+    assert exit_code(fs) == 0
+
+
+def test_exit_code_fails_on_active_findings():
+    fs = findings_for("""
+        import time
+        def sample():
+            return time.time()
+    """, "DB001")
+    assert active(fs) == fs
+    assert exit_code(fs) == 1
+    assert "DB001" in render(fs)
+
+
+def test_strict_requires_reason_on_used_pragmas(tmp_path):
+    bad = tmp_path / "bare.py"
+    bad.write_text("import time\n"
+                   "t = time.time()  # repro: allow(DB001)\n")
+    fs = run_analysis([str(bad)], require_reasons=True)
+    assert any(f.code == "DB000" for f in fs)
+    assert exit_code(fs) == 1
+    # same pragma with a reason is fine
+    good = tmp_path / "documented.py"
+    good.write_text("import time\n"
+                    "t = time.time()  # repro: allow(DB001): fixture\n")
+    fs = run_analysis([str(good)], require_reasons=True)
+    assert exit_code(fs) == 0
+
+
+def test_db000_on_unparseable_file(tmp_path):
+    f = tmp_path / "broken.py"
+    f.write_text("def oops(:\n")
+    fs = run_analysis([str(f)])
+    assert [f.code for f in fs] == ["DB000"]
+
+
+def test_catalog_covers_db001_through_db007():
+    assert {f"DB{i:03d}" for i in range(1, 8)} <= set(CHECK_CATALOG)
+
+
+# ---------------------------------------------------------------------------
+# tier-1 pin: the shipped tree is clean under --strict semantics
+# ---------------------------------------------------------------------------
+def test_src_tree_has_zero_active_findings(repo_src):
+    fs = run_analysis([str(repo_src / "repro")], require_reasons=True)
+    bad = active(fs)
+    assert bad == [], "\n".join(f.format() for f in bad)
+
+
+def test_cli_smoke(repo_src, capsys):
+    from repro.analysis.__main__ import main
+    assert main(["--list-checks"]) == 0
+    assert "DB001" in capsys.readouterr().out
+    assert main([str(repo_src / "repro"), "--strict"]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+@pytest.fixture
+def repo_src():
+    import pathlib
+    return pathlib.Path(__file__).resolve().parent.parent / "src"

@@ -59,6 +59,68 @@ def test_identify_prunes_unavailable():
     assert path == []
 
 
+def test_identify_cached_reuses_pruning_per_policy():
+    from repro.core.propagation import identify_cached
+    g = line_graph(4)
+    avail = lambda nid, t: nid != "n2"
+    p1 = identify_cached(g, avail, 0.0)
+    assert "n2" not in p1.nodes
+    # same snapshot + same policy: the hit is the same object
+    assert identify_cached(g, avail, 1.0) is p1
+    # structural mutation invalidates
+    g.add_node(Node("n9", "satellite"))
+    p2 = identify_cached(g, avail, 1.0)
+    assert p2 is not p1 and "n9" in p2.nodes
+
+
+def test_identify_cached_id_reuse_aliasing_regression():
+    """Pre-fix, the memo keyed on ``id(available)`` without keeping the
+    callable alive: a *new* policy allocated at a dead one's address hit
+    the stale entry and was served the old policy's pruning.  Force the
+    aliasing: drop the old policy, then allocate fresh closures until
+    CPython hands one the freed address (its function free-list makes
+    this near-immediate)."""
+    from repro.core.propagation import _IDENTIFY_CACHE, identify_cached
+    g = line_graph(4)
+
+    def make_policy(blocked):
+        return lambda nid, t: nid != blocked
+
+    old = make_policy("n2")
+    stale = identify_cached(g, old, 0.0)
+    assert "n2" not in stale.nodes
+    old_id = id(old)
+    del old                      # entry must not disappear with it...
+    assert _IDENTIFY_CACHE.get(g) is not None   # ...and it doesn't
+    aliased = None
+    for _ in range(1000):
+        cand = make_policy("n1")
+        if id(cand) == old_id:
+            aliased = cand
+            break
+        new = cand               # keep last candidate alive either way
+    fresh = aliased if aliased is not None else new
+    pruned = identify_cached(g, fresh, 0.0)
+    # the new policy blocks n1, not n2 — a stale hit would invert both
+    assert "n1" not in pruned.nodes
+    assert "n2" in pruned.nodes
+    assert pruned is not stale
+
+
+def test_identify_cached_revalidates_policy_identity():
+    """The aliasing defeat, deterministically: hand-plant a cache entry
+    whose stored callable differs from the caller's — the identity guard
+    must recompute rather than serve it (exactly what a reused id() slot
+    looks like from the memo's point of view)."""
+    from repro.core.propagation import _IDENTIFY_CACHE, identify_cached
+    g = line_graph(4)
+    planted = identify(g, lambda nid, t: nid != "n2", 0.0)
+    _IDENTIFY_CACHE[g] = (g._version, lambda nid, t: nid != "n2", planted)
+    pruned = identify_cached(g, lambda nid, t: nid != "n3", 0.0)
+    assert pruned is not planted
+    assert "n3" not in pruned.nodes and "n2" in pruned.nodes
+
+
 # ---------------------------------------------------------------------------
 # Algorithm 2: Compute
 # ---------------------------------------------------------------------------

@@ -1,0 +1,154 @@
+"""Runtime replay sanitizer: SimKernel trace hashing and
+``Scenario.verify_replay()`` divergence localization."""
+import itertools
+
+import pytest
+
+from repro.analysis.replay import (ReplayCheck, digest_entries,
+                                   diff_traces, verify_scenario)
+from repro.core.strategy import (StateStrategy, register_strategy,
+                                 unregister_strategy)
+from repro.scenario import FaultPlan, NetworkSpec, Scenario, WorkloadSpec
+from repro.sim.kernel import SimKernel
+from repro.sim.resources import SlotResource
+
+
+def _drive(kernel):
+    res = SlotResource("slots", capacity=1)
+
+    def worker(i):
+        yield 0.1 * i
+        yield ("acquire", res)
+        yield 0.5
+        yield ("release", res)
+
+    for i in range(4):
+        kernel.spawn(worker(i), label=f"w{i}")
+    kernel.log("setup-done")
+    kernel.run()
+    return kernel
+
+
+# ---------------------------------------------------------------------------
+# trace hashing
+# ---------------------------------------------------------------------------
+def test_trace_hash_deterministic_across_runs():
+    a = _drive(SimKernel(record_trace=True))
+    b = _drive(SimKernel(record_trace=True))
+    assert a.trace == b.trace
+    assert a.trace_hash() == b.trace_hash()
+
+
+def test_hash_mode_matches_recorded_trace():
+    full = _drive(SimKernel(record_trace=True))
+    streaming = _drive(SimKernel(record_trace="hash"))
+    assert streaming.trace is None          # O(1) memory: no list kept
+    assert streaming.trace_hash() == full.trace_hash()
+    # and both agree with the sanitizer's own encoder
+    assert digest_entries(full.trace) == full.trace_hash()
+
+
+def test_tracing_off_returns_none():
+    k = _drive(SimKernel())
+    assert k.trace is None
+    assert k.trace_hash() is None
+
+
+def test_tracing_does_not_change_event_order():
+    traced = _drive(SimKernel(record_trace=True))
+    plain = _drive(SimKernel())
+    assert plain.events_processed == traced.events_processed
+    assert plain.now == traced.now
+
+
+# ---------------------------------------------------------------------------
+# diff_traces
+# ---------------------------------------------------------------------------
+def test_diff_traces_identical_is_none():
+    t = [(0.0, 1, "schedule:a"), (0.5, 2, "fire:a")]
+    assert diff_traces(t, list(t)) is None
+
+
+def test_diff_traces_localizes_first_divergence():
+    a = [(0.0, 1, "schedule:a"), (0.5, 2, "fire:a"), (0.9, 3, "fire:b")]
+    b = [(0.0, 1, "schedule:a"), (0.6, 2, "fire:a"), (0.9, 3, "fire:b")]
+    d = diff_traces(a, b)
+    assert d.index == 1
+    assert (d.time_a, d.time_b) == (0.5, 0.6)
+    assert d.label_a == d.label_b == "fire:a"
+    assert d.digest_a != d.digest_b
+    assert d.prefix_digest == digest_entries(a[:1])
+    assert "index 1" in d.describe()
+
+
+def test_diff_traces_length_mismatch():
+    a = [(0.0, 1, "schedule:a")]
+    b = [(0.0, 1, "schedule:a"), (0.5, 2, "fire:a")]
+    d = diff_traces(a, b)
+    assert d.index == 1
+    assert d.label_a is None and d.label_b == "fire:a"
+    assert "<trace ended>" in d.describe()
+
+
+# ---------------------------------------------------------------------------
+# Scenario.verify_replay
+# ---------------------------------------------------------------------------
+def test_verify_replay_ok_on_deterministic_spec():
+    sc = Scenario(n=8, input_bytes=1e6, seed=3)
+    check = sc.verify_replay()
+    assert isinstance(check, ReplayCheck)
+    assert check.ok and check.divergence is None
+    assert check.events_a == check.events_b > 0
+    assert check.metrics_match
+    assert "replay OK" in check.describe()
+    assert not sc.record_trace                # original spec untouched
+
+
+def test_verify_replay_ok_under_churn():
+    # the moving-parts config: 2 regions, diurnal arrivals, poisson drains
+    sc = Scenario(
+        network=NetworkSpec(regions=2),
+        workload=WorkloadSpec(kind="regional_diurnal", rate=8.0,
+                              peak_to_trough=2.0, seed=11),
+        strategy="databelt", n=16, input_bytes=2e6,
+        faults=FaultPlan.poisson(rate=0.1, outage_s=6.0,
+                                 targets=("cloud0", "cloud1"),
+                                 horizon_s=14.0, seed=7))
+    check = sc.verify_replay()
+    assert check.ok, check.describe()
+
+
+_LEAK = itertools.count()
+
+
+class _LeakyClock(StateStrategy):
+    """Deliberately nondeterministic: placement depends on a process-
+    global counter, so a second run of the same spec sees a different
+    counter phase — exactly the leak the sanitizer exists to localize."""
+
+    def offload_state(self, function_id, host, t, key):
+        nodes = sorted(self.graph_fn(t).nodes)
+        return key.moved(nodes[next(_LEAK) % len(nodes)])
+
+
+def test_verify_replay_localizes_injected_nondeterminism():
+    register_strategy("test-leaky-clock")(_LeakyClock)
+    try:
+        sc = Scenario(strategy="test-leaky-clock", n=8, input_bytes=2e6,
+                      workflow="chain:3", seed=5)
+        check = sc.verify_replay()
+        assert not check.ok
+        assert check.divergence is not None
+        d = check.divergence
+        assert d.index >= 0
+        assert d.label_a is not None
+        assert "DIVERGED" in check.describe()
+        assert "first divergent event" in check.describe()
+    finally:
+        unregister_strategy("test-leaky-clock")
+
+
+def test_verify_scenario_equals_method():
+    sc = Scenario(n=4, input_bytes=1e6, seed=9)
+    assert verify_scenario(sc).trace_digest == \
+        sc.verify_replay().trace_digest
