@@ -5,6 +5,8 @@
     PYTHONPATH=src python -m benchmarks.run --list
     PYTHONPATH=src python -m benchmarks.run --scenario smoke-databelt
     PYTHONPATH=src python -m benchmarks.run --scenario-file spec.json
+    PYTHONPATH=src python -m benchmarks.run --scenario smoke-autoscale \
+        --trace experiments/bench/trace.json   # Perfetto-loadable
 
 Two registries:
 
@@ -76,31 +78,51 @@ def _scenarios() -> dict:
                      "seed": 11},
         "faults": churn,
     }
+    # fig14-style smoke: closed-loop pressure trips the autoscaler and a
+    # mid-run drain fires the fault path, so a traced run of this spec
+    # exercises every flight-recorder instant kind (CI's trace artifact)
+    specs["smoke-autoscale"] = {
+        "strategy": "stateless", "n": 32, "input_bytes": 2e6,
+        "workload": {"kind": "closed_loop", "clients": 16},
+        "autoscale": {"interval_s": 0.5, "queue_high": 1.0,
+                      "kinds": ["cpu", "kvs"]},
+        "faults": {"events": [{"t": 5.0, "duration_s": 4.0,
+                               "kind": "drain", "node": "cloud0",
+                               "link": []}]},
+    }
     return specs
 
 
-def _run_spec(spec: dict, label: str) -> dict:
+def _run_spec(spec: dict, label: str, trace_path: str = None) -> dict:
     """Round-trip ``spec`` through the Scenario serialization contract,
-    run it, and print the standard row."""
+    run it (flight-recorded when ``trace_path`` is given), and print the
+    standard row."""
     from repro.scenario import Scenario
     sc = Scenario.from_dict(spec)
     rt = Scenario.from_dict(json.loads(json.dumps(sc.to_dict())))
     assert rt.to_dict() == sc.to_dict(), \
         f"scenario {label!r} does not round-trip through to_dict/from_dict"
-    row = rt.run().row(scenario=label)
+    rep = rt.run(trace=bool(trace_path))
+    row = rep.row(scenario=label)
+    if trace_path:
+        import pathlib
+        pathlib.Path(trace_path).parent.mkdir(parents=True, exist_ok=True)
+        doc = rep.trace_report.export_perfetto(trace_path)
+        row["trace_events"] = len(doc["traceEvents"])
+        row["trace_path"] = trace_path
     print(json.dumps(row))
     return row
 
 
-def run_scenario(name: str) -> dict:
+def run_scenario(name: str, trace_path: str = None) -> dict:
     specs = _scenarios()
     if name not in specs:
         raise SystemExit(f"unknown scenario {name!r}; known: "
                          f"{', '.join(sorted(specs))}")
-    return _run_spec(specs[name], name)
+    return _run_spec(specs[name], name, trace_path=trace_path)
 
 
-def run_scenario_file(path: str) -> dict:
+def run_scenario_file(path: str, trace_path: str = None) -> dict:
     """Run an external ``Scenario.to_dict()``-format JSON spec file, so
     experiment grids can live outside the repo (ROADMAP small item)."""
     import pathlib
@@ -114,7 +136,7 @@ def run_scenario_file(path: str) -> dict:
     if not isinstance(spec, dict):
         raise SystemExit(f"scenario file {path} must hold one JSON "
                          f"object in Scenario.to_dict() format")
-    return _run_spec(spec, p.stem)
+    return _run_spec(spec, p.stem, trace_path=trace_path)
 
 
 def main() -> None:
@@ -129,6 +151,10 @@ def main() -> None:
     ap.add_argument("--scenario-file", action="append", default=[],
                     help="run an external Scenario.to_dict() JSON spec "
                          "file (same round-trip contract)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="flight-record the --scenario/--scenario-file "
+                         "run(s) and export a Perfetto/Chrome trace "
+                         "JSON to PATH (ui.perfetto.dev loads it)")
     args = ap.parse_args()
 
     if args.list:
@@ -140,11 +166,14 @@ def main() -> None:
             print(f"  {name}")
         return
 
+    if args.trace and not (args.scenario or args.scenario_file):
+        raise SystemExit("--trace requires --scenario or --scenario-file")
+
     if args.scenario or args.scenario_file:
         for name in args.scenario:
-            run_scenario(name)
+            run_scenario(name, trace_path=args.trace)
         for path in args.scenario_file:
-            run_scenario_file(path)
+            run_scenario_file(path, trace_path=args.trace)
         if not args.only:
             return
 

@@ -32,6 +32,8 @@ CHECK_CATALOG: Dict[str, str] = {
     "DB006": "version-guarded class mutates cached state without bumping "
              "the version (or reads a memo without the version check)",
     "DB007": "SlotResource acquire without a matching release",
+    "DB008": "telemetry/span emission timestamped from the host clock "
+             "instead of the kernel clock",
 }
 
 
@@ -135,6 +137,11 @@ def default_config() -> AnalysisConfig:
             "DB005": DETERMINISTIC_SCOPE,
             "DB006": ["*"],
             "DB007": ["*"],
+            # flight-recorder emission lives in (and is called from)
+            # the simulator packages; stamping it from the host clock
+            # breaks trace replay without breaking the sim itself
+            "DB008": ["repro.sim*", "repro.serverless*",
+                      "repro.continuum*"],
         },
         allowlist={
             # compile/measurement harness: lower+compile timings are

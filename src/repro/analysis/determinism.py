@@ -1,11 +1,15 @@
 """Determinism checkers: DB001 wall-clock reads, DB002 unseeded RNG,
-DB003 unordered-set iteration feeding event order.
+DB003 unordered-set iteration feeding event order, DB008 host-clock
+timestamps flowing into telemetry emission.
 
 Replay of the discrete-event kernel is bit-identical only while every
 quantity an event computes is a pure function of (seed, spec, simulated
-time).  These three checkers guard the classic leaks: the host's clock,
-process-global RNG state, and Python set iteration order (which hashes
-object addresses for non-str keys and is therefore run-dependent).
+time).  These checkers guard the classic leaks: the host's clock,
+process-global RNG state, Python set iteration order (which hashes
+object addresses for non-str keys and is therefore run-dependent), and
+span/metric emission stamped from the host clock instead of the kernel
+clock (the trace would differ between replays even when the simulation
+itself does not).
 """
 from __future__ import annotations
 
@@ -91,6 +95,53 @@ class UnseededRngChecker(Checker):
                         f"bare `random.{attr}()` — draws from the "
                         f"process-global generator, not a seeded "
                         f"stream"))
+        return out
+
+
+#: recorder emission surface (repro.sim.trace.SpanRecorder) plus the
+#: generic logging verbs instrumented code tends to grow.  DB008 looks
+#: *inside* the arguments of these calls for a host-clock read.
+TELEMETRY_METHODS = {"begin", "end", "instant", "complete", "observe",
+                     "add", "log"}
+
+
+@register_checker
+class TelemetryClockChecker(Checker):
+    """DB008 — telemetry emission timestamped from the host clock.
+
+    The flight recorder stamps spans from the bound kernel clock so a
+    trace replays bit-identically.  Passing ``time.time()`` (or any
+    ``WALL_CLOCK_CALLS`` read) as a span/metric/log argument silently
+    breaks that: the simulation still replays, the telemetry does not.
+    Scope covers every package that emits into the recorder
+    (``repro.sim``, ``repro.serverless``, ``repro.continuum``).
+    """
+
+    CODE = "DB008"
+    HINT = ("stamp telemetry from the simulation clock — kernel.now / "
+            "clock.now — or omit t= and let the recorder read its bound "
+            "kernel")
+
+    def check(self, unit: ModuleUnit) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(unit.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if not (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in TELEMETRY_METHODS):
+                continue
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            for arg in args:
+                for inner in ast.walk(arg):
+                    if not isinstance(inner, ast.Call):
+                        continue
+                    target = unit.resolve_call(inner.func)
+                    if target in WALL_CLOCK_CALLS:
+                        out.append(self.finding(
+                            unit, inner,
+                            f"telemetry call `.{node.func.attr}(...)` "
+                            f"timestamped with host clock `{target}()` "
+                            f"— the emitted trace will not replay"))
         return out
 
 

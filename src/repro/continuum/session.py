@@ -52,6 +52,10 @@ class StateSession:
         self.storage = storage
         self.kernel = kernel
         self.mode = mode
+        # flight-recorder parent span: the engine points this at the
+        # current phase span so storage-op spans nest under it.  Only
+        # consulted when storage.recorder is attached.
+        self.trace_parent = None
 
     def _clock(self):
         if self.mode == "event":
@@ -70,20 +74,62 @@ class StateSession:
         baseline's durability cost); ``account=False`` registers the key
         without charging any queue (fused groups registering their
         already-merged outgoing keys)."""
-        return self.storage._op_put(
-            key, size, payload, self._clock(), writer_node=writer,
+        clock = self._clock()
+        gen = self.storage._op_put(
+            key, size, payload, clock, writer_node=writer,
             replicate_global=replicate_global, global_sync=global_sync,
             account=account)
+        # account=False puts are bookkeeping (no queue, no time): not a
+        # storage op worth a span
+        if self.storage.recorder is None or not account:
+            return gen
+        return self._traced("put", gen, clock, bytes=size,
+                            writer=writer or key.storage_address,
+                            global_sync=global_sync)
 
     def get(self, key: StateKey, reader: str):
         """Resolve ``key`` from ``reader``: reader-local → holder node →
         global tier (home shard, then cross-region with read-repair)."""
-        return self.storage._op_get(key, reader, self._clock())
+        clock = self._clock()
+        gen = self.storage._op_get(key, reader, clock)
+        if self.storage.recorder is None:
+            return gen
+        return self._traced("get", gen, clock, reader=reader)
 
     def get_fused(self, keys, reader: str):
         """Grouped retrieval for a fusion group: one request per source
         node (paper §4.2) instead of one per function."""
-        return self.storage._op_get_fused(keys, reader, self._clock())
+        clock = self._clock()
+        gen = self.storage._op_get_fused(keys, reader, clock)
+        if self.storage.recorder is None:
+            return gen
+        return self._traced("get_fused", gen, clock, reader=reader,
+                            n_keys=len(keys))
+
+    def _traced(self, op: str, gen, clock, **attrs):
+        """Wrap one storage-op generator in a span: drives the op
+        unchanged (``yield from`` passes every kernel effect through)
+        and records tier / queue-wait / service / bytes attribution from
+        its ``AccessResult``.  Only ever constructed when a recorder is
+        attached — the untraced path returns the raw op generator."""
+        rec = self.storage.recorder
+        t0 = clock.now
+        out = yield from gen
+        r = out[1] if isinstance(out, tuple) else out
+        rec.complete(op, "storage", r.node or op, t0, clock.now,
+                     parent=self.trace_parent, tier=r.tier,
+                     hops=r.hops, latency_s=r.latency,
+                     network_latency_s=r.network_latency,
+                     queue_wait_s=r.queue_wait_s,
+                     service_s=r.service_s,
+                     global_keys=r.global_keys, **attrs)
+        mr = rec.metrics
+        mr.counter(f"storage.{op}.ops").add(1)
+        mr.counter(f"storage.tier.{r.tier or 'unknown'}").add(1)
+        if math.isfinite(r.latency):
+            mr.histogram(f"storage.{op}.latency_s").observe(r.latency)
+            mr.histogram("storage.queue_wait_s").observe(r.queue_wait_s)
+        return out
 
     # -- pure peeks (no queue mutation, no time) --------------------------
     def peek_network_latency(self, key: StateKey, reader: str,

@@ -78,6 +78,15 @@ class AccessResult:
     global_keys: int = 0        # keys served via the global tier (a
                                 # fused read resolves several at once)
     network_latency: float = 0.0  # path latency + wire transfer only
+    # flight-recorder attribution (filled by the op path; zero-cost —
+    # plain dataclass fields, no allocation beyond the result itself):
+    tier: str = ""              # which tier served the op: "local" /
+                                # "holder" / "global-home" /
+                                # "global-fallback" / "fused" / writes
+                                # "write-local" / "write-remote"
+    node: str = ""              # the node whose KVS served the op
+    queue_wait_s: float = 0.0   # time spent waiting on KVS queues
+    service_s: float = 0.0      # KVS service time actually consumed
 
 
 # ---------------------------------------------------------------------------
@@ -99,6 +108,9 @@ class _AnalyticClock:
         self.t0 = t
         self.elapsed = 0.0
         self.kernel = kernel if kernel is not None else storage.scheduler
+        # queue-wait vs service attribution for the flight recorder
+        self.queue_wait = 0.0
+        self.service = 0.0
 
     @property
     def now(self) -> float:
@@ -115,12 +127,16 @@ class _AnalyticClock:
     def kvs_leg(self, node: str, service_s: float):
         wait = self.storage.resources.kvs(node).request(self.now, service_s)
         self.elapsed += wait + service_s
+        self.queue_wait += wait
+        self.service += service_s
         return
         yield  # noqa: unreachable — makes this a generator
 
     def fused_leg(self, node: str, service_s: float):
         wait = self.storage.resources.kvs(node).request(self.t0, service_s)
         self.elapsed += wait + service_s
+        self.queue_wait += wait
+        self.service += service_s
         return
         yield  # noqa: unreachable — makes this a generator
 
@@ -148,6 +164,9 @@ class _EventClock:
         self.storage = storage
         self.kernel = kernel
         self.t0 = kernel.now
+        # queue-wait vs service attribution for the flight recorder
+        self.queue_wait = 0.0
+        self.service = 0.0
 
     @property
     def now(self) -> float:
@@ -162,7 +181,10 @@ class _EventClock:
 
     def kvs_leg(self, node: str, service_s: float):
         res = self.storage.resources.kvs(node)
+        t_enq = self.kernel.now
         yield ("acquire", res)
+        self.queue_wait += self.kernel.now - t_enq
+        self.service += service_s
         res.total_service += service_s
         yield service_s
         yield ("release", res)
@@ -192,6 +214,10 @@ class TwoTierStorage:
         # an attached SimKernel turns async replication into deferred
         # events; None falls back to inline accounting (sequential mode)
         self.scheduler = None
+        # optional flight recorder (repro.sim.trace.SpanRecorder): the
+        # session layer checks this for None before wrapping any op, so
+        # untraced runs keep the raw generator fast path
+        self.recorder = None
 
     @staticmethod
     def _clouds(graph: TopologyGraph) -> List[str]:
@@ -222,12 +248,15 @@ class TwoTierStorage:
 
     def _global_locate(self, graph: TopologyGraph, enc: str, reader: str,
                        heal: bool = False
-                       ) -> Tuple[Optional[StoredState], Optional[str]]:
+                       ) -> Tuple[Optional[StoredState], Optional[str],
+                                  bool]:
         """Resolve ``enc`` through the sharded global tier: the key's home
         region first, then cross-region fallback to the replica nearest
-        the reader.  Returns ``(state, serving_cloud)``; ``serving_cloud``
-        is None when the value exists but no in-graph cloud holds it (the
-        unsharded legacy shard) — the caller then charges the holder.
+        the reader.  Returns ``(state, serving_cloud, home_hit)``;
+        ``serving_cloud`` is None when the value exists but no in-graph
+        cloud holds it (the unsharded legacy shard) — the caller then
+        charges the holder.  ``home_hit`` separates the home-shard path
+        from the cross-region fallback for tier attribution.
 
         ``heal`` enables read-repair: a home-shard miss served from a
         fallback replica re-populates the home shard, so the *next* read
@@ -237,7 +266,7 @@ class TwoTierStorage:
         if clouds:
             home = self.global_tier.home(enc, clouds)
             if self.global_tier.has(enc, home):
-                return self.global_tier.get(enc, home), home
+                return self.global_tier.get(enc, home), home, True
             holders = self.global_tier.locate(enc)
             if holders:
                 def rank(r: str):
@@ -250,9 +279,9 @@ class TwoTierStorage:
                 st = self.global_tier.get(enc, best)
                 if heal:
                     self.global_tier.heal(enc, home, st)
-                return st, best if best in graph.nodes else None
-            return None, None
-        return self.global_tier.get_any(enc), None
+                return st, best if best in graph.nodes else None, False
+            return None, None, False
+        return self.global_tier.get_any(enc), None, False
 
     # ------------------------------------------------------------------
     # the one internal path per operation (clock-parameterized generators)
@@ -280,7 +309,8 @@ class TwoTierStorage:
         if not account:
             if replicate_global:
                 self._replicate_record(graph, src, key, st)
-            return AccessResult(0.0, hops, src == dst)
+            return AccessResult(0.0, hops, src == dst, tier="register",
+                                node=dst)
         # leg order is the same in BOTH modes (the redesign's contract:
         # the mode changes how legs are paid, never which legs or their
         # order): the write commits the destination KVS slot at op start
@@ -313,7 +343,11 @@ class TwoTierStorage:
                     clock.async_replica(cloud, glat, service_s,
                                         f"replicate:{key.encoded()}")
         return AccessResult(clock.total(), hops, src == dst,
-                            network_latency=lat)
+                            network_latency=lat,
+                            tier="write-local" if src == dst
+                            else "write-remote", node=dst,
+                            queue_wait_s=clock.queue_wait,
+                            service_s=clock.service)
 
     def _op_get(self, key: StateKey, reader_node: str, clock):
         graph = self.graph_fn(clock.now)
@@ -323,7 +357,10 @@ class TwoTierStorage:
         if st is not None:
             yield from clock.kvs_leg(reader_node,
                                      KVS_OP_LATENCY + st.size / KVS_READ_BW)
-            return st, AccessResult(clock.total(), 0, True)
+            return st, AccessResult(clock.total(), 0, True,
+                                    tier="local", node=reader_node,
+                                    queue_wait_s=clock.queue_wait,
+                                    service_s=clock.service)
         # local tier on the address node
         holder = key.storage_address
         st = self.local.get(holder, {}).get(enc)
@@ -334,12 +371,15 @@ class TwoTierStorage:
                     holder, KVS_OP_LATENCY + st.size / KVS_READ_BW)
                 yield from clock.sleep(lat)
                 return st, AccessResult(clock.total(), hops, False,
-                                        network_latency=lat)
+                                        network_latency=lat,
+                                        tier="holder", node=holder,
+                                        queue_wait_s=clock.queue_wait,
+                                        service_s=clock.service)
         # global tier fallback (holder missing or unreachable): home
         # shard first, then cross-region — healing the home shard when
         # the fallback served the read
-        st, serving = self._global_locate(graph, enc, reader_node,
-                                          heal=True)
+        st, serving, home_hit = self._global_locate(graph, enc,
+                                                    reader_node, heal=True)
         if st is not None:
             src_node = serving or holder
             lat, hops = self._transfer(graph, src_node, reader_node,
@@ -352,8 +392,14 @@ class TwoTierStorage:
             yield from clock.sleep(lat)
             return st, AccessResult(clock.total(), hops, False,
                                     from_global=True, global_keys=1,
-                                    network_latency=lat)
-        return None, AccessResult(math.inf, 10**9, False)
+                                    network_latency=lat,
+                                    tier="global-home" if home_hit
+                                    else "global-fallback",
+                                    node=src_node,
+                                    queue_wait_s=clock.queue_wait,
+                                    service_s=clock.service)
+        return None, AccessResult(math.inf, 10**9, False, tier="missing",
+                                  node=reader_node)
 
     def _op_get_fused(self, keys, reader_node: str, clock):
         """Grouped retrieval for a fusion group: ONE request per source
@@ -365,11 +411,13 @@ class TwoTierStorage:
         for key in keys:
             loc = self._locate(key, reader_node, graph, heal=True)
             if loc is None:
-                return None, AccessResult(math.inf, 10**9, False)
-            st, src, from_global = loc
+                return None, AccessResult(math.inf, 10**9, False,
+                                          tier="missing",
+                                          node=reader_node)
+            st, src, tier = loc
             by_source[src] = by_source.get(src, 0.0) + st.size
             states.append(st)
-            n_global += 1 if from_global else 0
+            n_global += 1 if tier.startswith("global") else 0
         max_hops, all_local, net = 0, True, 0.0
         for src, size in by_source.items():
             lat, hops = self._transfer(graph, src, reader_node, size)
@@ -384,7 +432,10 @@ class TwoTierStorage:
         return states, AccessResult(clock.total(), max_hops, all_local,
                                     from_global=n_global > 0,
                                     global_keys=n_global,
-                                    network_latency=net)
+                                    network_latency=net,
+                                    tier="fused", node=reader_node,
+                                    queue_wait_s=clock.queue_wait,
+                                    service_s=clock.service)
 
     # ------------------------------------------------------------------
     # synchronous entry points (analytic clock, drained inline)
@@ -428,17 +479,20 @@ class TwoTierStorage:
     def _locate(self, key: StateKey, reader: str, graph,
                 heal: bool = False):
         """Resolve ``key`` for ``reader``: reader-local → holder node →
-        global tier.  Returns ``(state, serving_node, from_global)`` or
-        None."""
+        global tier.  Returns ``(state, serving_node, tier)`` — tier one
+        of ``"local"``/``"holder"``/``"global-home"``/
+        ``"global-fallback"`` — or None."""
         enc = key.encoded()
         if enc in self.local.get(reader, {}):
-            return (self.local[reader][enc], reader, False)
+            return (self.local[reader][enc], reader, "local")
         holder = key.storage_address
         if enc in self.local.get(holder, {}) and holder in graph.nodes:
-            return (self.local[holder][enc], holder, False)
-        st, serving = self._global_locate(graph, enc, reader, heal=heal)
+            return (self.local[holder][enc], holder, "holder")
+        st, serving, home_hit = self._global_locate(graph, enc, reader,
+                                                    heal=heal)
         if st is not None:
-            return (st, serving or holder, True)
+            return (st, serving or holder,
+                    "global-home" if home_hit else "global-fallback")
         return None
 
     WAN_EFFICIENCY = 0.6   # TCP over 45-75 ms RTT links never hits line rate

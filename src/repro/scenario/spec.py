@@ -271,21 +271,36 @@ class Scenario:
             mode=self.mode, region_weight=self.region_weight)
 
     # -- execution -------------------------------------------------------
-    def run(self) -> "ScenarioReport":
+    def run(self, trace=None) -> "ScenarioReport":
+        """Drive the run this spec describes.  ``trace`` attaches the
+        flight recorder (``repro.sim.trace``): pass ``True`` for a fresh
+        ``SpanRecorder`` or an existing one; the report then carries a
+        ``trace_report`` with per-instance phase spans, storage-tier
+        attrs and autoscale/fault instants (``export_perfetto`` for the
+        Perfetto UI).  A sequential workload accumulates all n instances
+        into one recorder across their private kernels."""
         self.validate()
         eng = self.build_engine()
         maker = workflow_maker(self.workflow)
+        recorder = None
+        if trace:
+            from repro.sim.trace import SpanRecorder
+            recorder = trace if isinstance(trace, SpanRecorder) \
+                else SpanRecorder()
         if self.workload.kind == "sequential":
             ms, starts, ends = [], [], []
             for i in range(self.n):
                 t0 = i * self.workload.spacing
                 m = eng.run_instance(maker(f"wf{i}"), self.input_bytes,
-                                     t0=t0, entry=self.workload.entry)
+                                     t0=t0, entry=self.workload.entry,
+                                     trace=recorder)
                 ms.append(m)
                 starts.append(t0)
                 ends.append(t0 + m.latency)
             rep = ParallelReport.build(ms, starts, ends,
-                                       pool=eng.resources)
+                                       pool=eng.resources,
+                                       trace_report=recorder.report()
+                                       if recorder is not None else None)
         else:
             workload, entry = self.workload.build(self.network.regions,
                                                   self.seed)
@@ -293,7 +308,8 @@ class Scenario:
                 maker, self.n, self.input_bytes, workload=workload,
                 entry=entry, record_trace=self.record_trace,
                 autoscale=self.autoscale, faults=self.faults,
-                collect=self.collect, lazy_arrivals=self.lazy_arrivals)
+                collect=self.collect, lazy_arrivals=self.lazy_arrivals,
+                trace=recorder)
         return ScenarioReport(scenario=self, rep=rep)
 
     def verify_replay(self):
@@ -445,6 +461,12 @@ class ScenarioReport:
         return self.rep.trace
 
     @property
+    def trace_report(self):
+        """Flight-recorder ``TraceReport`` when ``run(trace=...)`` was
+        traced, else ``None``."""
+        return self.rep.trace_report
+
+    @property
     def autoscale(self):
         return self.rep.autoscale
 
@@ -473,6 +495,7 @@ class ScenarioReport:
             "p95_s": round(self.p95, 3),
             "p99_s": round(self.p99, 3),
             "mean_latency_s": round(self.mean_latency, 3),
+            "global_fallback_rate": round(self.rep.global_fallback_rate, 4),
             "events": self.rep.events_processed,
         }
         r.update(extra)

@@ -51,6 +51,7 @@ from repro.sim.faults import FaultInjector, FaultPlan
 from repro.sim.kernel import SimKernel
 from repro.sim.metrics import FleetAggregate, ParallelReport
 from repro.sim.resources import ResourcePool
+from repro.sim.trace import SpanRecorder
 from repro.sim.workload import UniformStagger, iter_arrivals
 
 SANDBOX_INIT_S = 1.0   # Knative-class cold start per sandbox; fusion packs
@@ -364,9 +365,29 @@ class WorkflowEngine:
         run = _InstanceRun(wf=wf, session=session, placement=placement,
                            metrics=m)
 
+        # flight recorder: one root span per instance, phase child spans
+        # (ingress / cpu_wait / fetch / execute / offload) covering its
+        # whole wall time, storage-op spans nesting under the phases via
+        # session.trace_parent.  Every hook is one ``is not None`` check
+        # so the untraced hot path allocates nothing.
+        rec = kernel.recorder
+        root = sid = None
+        lane = ""
+        if rec is not None:
+            lane = f"inst:{wf.workflow_id}"
+            root = rec.begin(wf.workflow_id, "instance", lane,
+                             strategy=self.strategy, entry=entry,
+                             groups=len(groups))
+
         # the workflow input arrives at the entry node
         src_key = StateKey(wf.workflow_id, entry, "__input__")
+        if rec is not None:
+            sid = rec.begin("ingress", "phase", lane, parent=root,
+                            node=entry)
+            session.trace_parent = sid
         yield from session.put(src_key, input_bytes, writer=entry)
+        if rec is not None:
+            rec.end(sid, bytes=input_bytes)
         run.keys["__input__"] = src_key
         run.sizes["__input__"] = input_bytes
         if self.real_compute:
@@ -376,11 +397,41 @@ class WorkflowEngine:
             # claim a CPU slot on the node (contention model) for the
             # whole fetch -> execute -> offload span
             cpu = self.resources.cpu(g.node_id)
+            t_acq = kernel.now
             yield ("acquire", cpu)
+            if rec is not None and kernel.now > t_acq:
+                rec.complete("cpu_wait", "phase", lane, t_acq,
+                             kernel.now, parent=root, node=g.node_id)
             kernel.log(f"{wf.workflow_id}:start:{g.group_id}")
+            if rec is not None:
+                r0, h0 = m.reads, len(m.hops)
+                g0, rt0 = m.global_reads, m.read_time
+                sid = rec.begin("fetch", "phase", lane, parent=root,
+                                node=g.node_id, group=g.group_id)
+                session.trace_parent = sid
             yield from self._fetch_group(kernel, run, g)
+            if rec is not None:
+                rec.end(sid, reads=m.reads - r0,
+                        hops=max(m.hops[h0:], default=0),
+                        global_reads=m.global_reads - g0,
+                        read_time_s=m.read_time - rt0)
+                c0 = m.compute_time
+                sid = rec.begin("execute", "phase", lane, parent=root,
+                                node=g.node_id, group=g.group_id,
+                                functions=len(g.function_ids))
+                session.trace_parent = sid
             yield from self._execute_group(kernel, run, g)
+            if rec is not None:
+                rec.end(sid, compute_time_s=m.compute_time - c0)
+                w0, s0 = m.write_time, m.storage_ops
+                sid = rec.begin("offload", "phase", lane, parent=root,
+                                node=g.node_id, group=g.group_id)
+                session.trace_parent = sid
             yield from self._offload_group(kernel, run, g)
+            if rec is not None:
+                rec.end(sid, write_time_s=m.write_time - w0,
+                        storage_ops=m.storage_ops - s0)
+                session.trace_parent = root
             kernel.log(f"{wf.workflow_id}:done:{g.group_id}")
             yield ("release", cpu)
 
@@ -388,18 +439,46 @@ class WorkflowEngine:
         # resource proxies (paper Table 2 reports flat ~16% CPU / ~1.4GB)
         m.cpu_pct = self.placer.cpu_pct_proxy
         m.ram_mb = self.placer.ram_mb_proxy
+        if rec is not None:
+            rec.end(root, latency_s=m.latency,
+                    slo_violations=m.slo_violations, reads=m.reads,
+                    local_reads=m.local_reads,
+                    global_reads=m.global_reads)
+            mr = rec.metrics
+            mr.counter("instances").add(1)
+            mr.counter("slo_violations").add(m.slo_violations)
+            mr.histogram("instance.latency_s").observe(m.latency)
+            mr.histogram("instance.read_time_s").observe(m.read_time)
+            mr.histogram("instance.write_time_s").observe(m.write_time)
 
     # ------------------------------------------------------------------
     def run_instance(self, wf: Workflow, input_bytes: float, t0: float = 0.0,
-                     entry: str = "drone0") -> InstanceMetrics:
+                     entry: str = "drone0",
+                     trace=None) -> InstanceMetrics:
         """Run ONE instance to completion on a private event loop (shared
         storage + resource queues, so sequential calls still observe each
-        other's leftover backlog, as on a long-lived deployment)."""
+        other's leftover backlog, as on a long-lived deployment).
+
+        ``trace`` attaches a flight recorder: pass ``True`` for a fresh
+        ``repro.sim.trace.SpanRecorder`` or an existing recorder to
+        accumulate several sequential instances into one stream (the
+        recorder is re-bound to this instance's private kernel)."""
         kernel = SimKernel(start=t0)
+        recorder = None
+        if trace:
+            recorder = trace if isinstance(trace, SpanRecorder) \
+                else SpanRecorder()
+            recorder.bind(kernel)
+            kernel.recorder = recorder
+            self.storage.recorder = recorder
         m = InstanceMetrics()
         kernel.spawn(self._instance_proc(kernel, wf, input_bytes, entry, m),
                      label=wf.workflow_id)
-        kernel.run()
+        try:
+            kernel.run()
+        finally:
+            if recorder is not None:
+                self.storage.recorder = None
         return m
 
     # ------------------------------------------------------------------
@@ -410,7 +489,8 @@ class WorkflowEngine:
                      autoscale: Optional[AutoscalePolicy] = None,
                      faults: Optional[FaultPlan] = None,
                      collect: str = "full",
-                     lazy_arrivals: bool = False
+                     lazy_arrivals: bool = False,
+                     trace=None
                      ) -> ParallelReport:
         """n truly concurrent workflow instances on one shared event loop.
 
@@ -458,6 +538,14 @@ class WorkflowEngine:
           feeder's events take different sequence numbers than eager
           pre-scheduling, so same-timestamp ties can break differently:
           off by default, and the golden-pinned figures never enable it.
+
+        ``trace`` attaches the flight recorder (``repro.sim.trace``):
+        pass ``True`` for a fresh ``SpanRecorder`` or an existing one;
+        the report's ``trace_report`` then carries the frozen
+        ``TraceReport`` (spans, instants, metric snapshot).  Recording
+        never touches event order — a traced run's metrics are
+        bit-identical to the untraced run (pinned in
+        ``tests/test_trace.py``).
         """
         if collect not in ("full", "aggregate"):
             raise ValueError(f"unknown collect mode {collect!r}; choose "
@@ -468,6 +556,13 @@ class WorkflowEngine:
                 "committed-schedule accounting cannot park requests on a "
                 "drained node")
         kernel = SimKernel(start=t0, record_trace=record_trace)
+        recorder = None
+        if trace:
+            recorder = trace if isinstance(trace, SpanRecorder) \
+                else SpanRecorder()
+            recorder.bind(kernel)
+            kernel.recorder = recorder
+            self.storage.recorder = recorder
         scaler = Autoscaler(kernel, self.resources, autoscale).start() \
             if autoscale is not None else None
         injector = FaultInjector(kernel, self.net, self.resources,
@@ -534,12 +629,16 @@ class WorkflowEngine:
             if gc_was_enabled:
                 gc.enable()
                 gc.collect()
+            if recorder is not None:
+                self.storage.recorder = None
         common = dict(
             pool=self.resources,
             events_processed=kernel.events_processed,
             trace=kernel.trace,
             autoscale=scaler.report() if scaler is not None else None,
-            faults=injector.report() if injector is not None else None)
+            faults=injector.report() if injector is not None else None,
+            trace_report=recorder.report()
+            if recorder is not None else None)
         if agg is not None:
             return ParallelReport.build_aggregate(agg, **common)
         results.sort(key=lambda r: r[0])

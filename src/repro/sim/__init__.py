@@ -5,5 +5,7 @@ from repro.sim.faults import (FaultEvent, FaultInjector,  # noqa: F401
 from repro.sim.kernel import SimKernel  # noqa: F401
 from repro.sim.metrics import ParallelReport, percentile  # noqa: F401
 from repro.sim.resources import ResourcePool, SlotResource  # noqa: F401
+from repro.sim.trace import (MetricRegistry, SpanRecorder,  # noqa: F401
+                             TraceReport)
 from repro.sim.workload import (ClosedLoop, OpenLoopPoisson,  # noqa: F401
                                 RegionalDiurnal, UniformStagger)

@@ -220,6 +220,11 @@ class Autoscaler:
             self.kernel.log(
                 f"autoscale-pending:{res.name}:{res.capacity}->"
                 f"{new_cap}:{reason}")
+            rec = self.kernel.recorder
+            if rec is not None:
+                rec.instant("autoscale-pending", "autoscale", res.name,
+                            old=res.capacity, new=new_cap, reason=reason,
+                            ready_t=ready)
             self.kernel.call_at(
                 ready,
                 lambda: self._apply_pending(res, new_cap, reason),
@@ -240,12 +245,20 @@ class Autoscaler:
     def _apply(self, res: SlotResource, new_cap: int, now: float,
                reason: str) -> None:
         old = res.capacity
+        rec = self.kernel.recorder
         woken = res.set_capacity(new_cap, now)
-        for proc, label in woken:
+        for proc, label, waited in woken:
             self.kernel.log(f"grant:{label}@{res.name}")
+            if rec is not None and waited > 0.0:
+                rec.complete("slot_wait", "kernel", res.name,
+                             now - waited, now, proc=label)
             self.kernel.wake(proc, label)
         self.kernel.log(
             f"autoscale:{res.name}:{old}->{res.capacity}:{reason}")
+        if rec is not None:
+            rec.instant("autoscale", "autoscale", res.name, old=old,
+                        new=res.capacity, reason=reason,
+                        woken=len(woken))
         self.actions.append(AutoscaleAction(now, res.name, old,
                                             res.capacity, reason))
 

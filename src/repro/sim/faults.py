@@ -177,6 +177,7 @@ class FaultInjector:
             # overlapping drain of an already-down node: the first
             # outage's restore wins; re-draining would lose its prior
             # capacities
+            self.kernel.log(f"fault:skip:drain:{node}")
             self._report.skipped.append(ev)
             return
         # force-create the node's pools (while its topology entry is
@@ -190,6 +191,10 @@ class FaultInjector:
         self._down[node] = prior
         self.net.set_node_down(node, True)
         self.kernel.log(f"fault:drain:{node}")
+        rec = self.kernel.recorder
+        if rec is not None:
+            rec.instant("fault:drain", "fault", node,
+                        duration_s=ev.duration_s)
         self._report.applied.append(ev)
         self.kernel.call_at(self.kernel.now + ev.duration_s,
                             lambda n=node: self._restore(n),
@@ -200,25 +205,37 @@ class FaultInjector:
         if prior is None:
             return
         self.net.set_node_down(node, False)
+        rec = self.kernel.recorder
+        now = self.kernel.now
         for kind, cap in sorted(prior.items()):
             res = self.pool.peek(kind, node)
             if res is None:
                 continue
-            for proc, label in res.set_capacity(cap, self.kernel.now):
+            for proc, label, waited in res.set_capacity(cap, now):
                 self.kernel.log(f"grant:{label}@{res.name}")
+                if rec is not None and waited > 0.0:
+                    rec.complete("slot_wait", "kernel", res.name,
+                                 now - waited, now, proc=label)
                 self.kernel.wake(proc, label)
         self.kernel.log(f"fault:restore:{node}")
+        if rec is not None:
+            rec.instant("fault:restore", "fault", node)
         self._report.restores += 1
 
     def _apply_link(self, ev: FaultEvent) -> None:
         a, b = ev.link
         pair = (a, b) if a <= b else (b, a)
         if pair in self._lost_links:
+            self.kernel.log(f"fault:skip:linkloss:{a}|{b}")
             self._report.skipped.append(ev)
             return
         self._lost_links.add(pair)
         self.net.set_link_down(a, b, True)
         self.kernel.log(f"fault:linkloss:{a}|{b}")
+        rec = self.kernel.recorder
+        if rec is not None:
+            rec.instant("fault:linkloss", "fault", f"{a}|{b}",
+                        duration_s=ev.duration_s)
         self._report.applied.append(ev)
         self.kernel.call_at(self.kernel.now + ev.duration_s,
                             lambda p=pair: self._restore_link(p),
@@ -230,6 +247,10 @@ class FaultInjector:
         self._lost_links.discard(pair)
         self.net.set_link_down(pair[0], pair[1], False)
         self.kernel.log(f"fault:linkrestore:{pair[0]}|{pair[1]}")
+        rec = self.kernel.recorder
+        if rec is not None:
+            rec.instant("fault:linkrestore", "fault",
+                        f"{pair[0]}|{pair[1]}")
         self._report.restores += 1
 
     # -- results ---------------------------------------------------------

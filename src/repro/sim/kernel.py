@@ -59,6 +59,10 @@ class SimKernel:
         self._hash = hashlib.blake2b(digest_size=16) \
             if record_trace == "hash" else None
         self._tracing = self.trace is not None or self._hash is not None
+        # optional flight recorder (repro.sim.trace.SpanRecorder):
+        # attached by a traced run; every hook below is a single
+        # ``is not None`` check so the disabled path allocates nothing
+        self.recorder = None
 
     def _note(self, t: float, seq: int, label: str) -> None:
         if self.trace is not None:
@@ -135,24 +139,40 @@ class SimKernel:
                 raise ValueError(
                     f"daemon process {label!r} must not block on "
                     f"resources (yielded {op!r})")
+            rec = self.recorder
             if op == "acquire":
                 if res.hold(self.now):
                     if self._tracing:
                         self.log(f"grant:{label}@{res.name}")
+                    if rec is not None:
+                        rec.instant("grant", "kernel", res.name,
+                                    proc=label)
                     self._push(self.now, "proc", proc, label, daemon=daemon)
                 else:
                     res.enqueue_waiter(proc, label, self.now)
                     if self._tracing:
                         self.log(f"wait:{label}@{res.name}")
+                    if rec is not None:
+                        rec.instant("wait", "kernel", res.name,
+                                    proc=label)
                 return
             if op == "release":
                 if self._tracing:
                     self.log(f"free:{label}@{res.name}")
+                if rec is not None:
+                    rec.instant("free", "kernel", res.name, proc=label)
                 woken = res.unhold(self.now)
                 if woken is not None:
-                    wproc, wlabel = woken
+                    wproc, wlabel, waited = woken
                     if self._tracing:
                         self.log(f"grant:{wlabel}@{res.name}")
+                    if rec is not None:
+                        if waited > 0.0:
+                            rec.complete("slot_wait", "kernel", res.name,
+                                         self.now - waited, self.now,
+                                         proc=wlabel)
+                        rec.instant("grant", "kernel", res.name,
+                                    proc=wlabel)
                     self._push(self.now, "proc", wproc, wlabel)
                 self._push(self.now, "proc", proc, label, daemon=daemon)
                 return
@@ -180,6 +200,7 @@ class SimKernel:
         """
         heap = self._heap
         pop = heapq.heappop
+        rec = self.recorder
         while heap and self._live > 0:
             if until is not None and heap[0][0] > until:
                 break
@@ -193,6 +214,8 @@ class SimKernel:
             self.events_processed += 1
             if self._tracing:
                 self._note(self.now, seq, f"fire:{label}")
+            if daemon and rec is not None:
+                rec.instant("daemon-wake", "kernel", label)
             if kind == "proc":
                 self._step_proc(payload, label, daemon)
             else:

@@ -241,6 +241,9 @@ class ParallelReport:
     # FleetAggregate when the run collected aggregates instead of
     # materialized per-instance metrics, else None
     aggregate: Optional[FleetAggregate] = None
+    # repro.sim.trace.TraceReport when the run had the flight recorder
+    # attached (trace=...), else None
+    trace_report: Optional[object] = None
 
     @property
     def n_instances(self) -> int:
@@ -259,13 +262,27 @@ class ParallelReport:
         ls = self.latencies
         return sum(ls) / len(ls) if ls else 0.0
 
+    @property
+    def global_fallback_rate(self) -> float:
+        """Share of all reads served by the global tier — the fleet's
+        churn-observability signal.  A ratio of integer *sums* (not the
+        mean of per-instance rates), so full and aggregate collect modes
+        agree exactly."""
+        if self.aggregate is not None:
+            return self.aggregate.global_reads / max(
+                self.aggregate.reads, 1)
+        greads = sum(m.global_reads for m in self.instances)
+        reads = sum(m.reads for m in self.instances)
+        return greads / max(reads, 1)
+
     def max_kvs_depth(self, node: str) -> int:
         return int(self.kvs_queues.get(node, {}).get("max_queue_depth", 0))
 
     @classmethod
     def build(cls, instances, start_times, end_times, pool=None,
               events_processed: int = 0, trace=None,
-              autoscale=None, faults=None) -> "ParallelReport":
+              autoscale=None, faults=None,
+              trace_report=None) -> "ParallelReport":
         lats = [m.latency for m in instances]
         t0 = min(start_times) if start_times else 0.0
         t1 = max(end_times) if end_times else 0.0
@@ -291,12 +308,14 @@ class ParallelReport:
             trace=trace,
             autoscale=autoscale,
             faults=faults,
+            trace_report=trace_report,
         )
 
     @classmethod
     def build_aggregate(cls, agg: FleetAggregate, pool=None,
                         events_processed: int = 0, trace=None,
-                        autoscale=None, faults=None) -> "ParallelReport":
+                        autoscale=None, faults=None,
+                        trace_report=None) -> "ParallelReport":
         """Fleet report from a running ``FleetAggregate`` — no
         per-instance lists, constant memory in the fleet size."""
         makespan = agg.makespan
@@ -314,6 +333,7 @@ class ParallelReport:
             autoscale=autoscale,
             faults=faults,
             aggregate=agg,
+            trace_report=trace_report,
         )
 
     # list-compat -------------------------------------------------------

@@ -138,12 +138,14 @@ class SlotResource:
         proc, label, t_enq = self._wait_q.popleft()
         self._held += 1
         self.n_requests += 1
-        self.total_wait += t - t_enq
-        return proc, label
+        waited = t - t_enq
+        self.total_wait += waited
+        return proc, label, waited
 
     def unhold(self, t: float):
         """Release a held slot at ``t``; returns the woken head waiter as
-        (proc, label) — the slot transfers to it — or None.  After a
+        (proc, label, waited_s) — the slot transfers to it — or None.
+        After a
         capacity shrink the freed slot may itself be retiring
         (``_held > capacity``): it then drains instead of re-granting."""
         if self._held <= 0:
@@ -159,8 +161,9 @@ class SlotResource:
         """Resize to ``new_capacity`` servers at time ``t``.
 
         Grow: the added servers come up free at ``t`` and parked held-slot
-        waiters are admitted immediately — returned as ``[(proc, label),
-        ...]`` for the caller to ``SimKernel.wake()``.  Shrink: drain-only —
+        waiters are admitted immediately — returned as ``[(proc, label,
+        waited_s), ...]`` for the caller to ``SimKernel.wake()``.
+        Shrink: drain-only —
         the idlest servers retire first and anything in flight (analytic
         backlog or held slots) runs to completion; excess held slots fall
         away one release at a time via ``unhold``.  ``new_capacity=0`` is

@@ -313,6 +313,49 @@ def test_db007_clean_on_paired_slots():
 
 
 # ---------------------------------------------------------------------------
+# DB008 — host-clock timestamps flowing into telemetry
+# ---------------------------------------------------------------------------
+def test_db008_flags_wall_clock_telemetry_timestamp():
+    fs = active_for("""
+        import time
+        def emit(rec):
+            rec.instant("tick", "kernel", "cpu:n0", t=time.time())
+    """, "DB008", module="repro.sim.fixture")
+    assert len(fs) == 1
+    assert "time.time" in fs[0].message and ".instant(" in fs[0].message
+
+
+def test_db008_flags_clock_read_nested_in_span_attr():
+    fs = active_for("""
+        import time
+        def emit(rec, sid):
+            rec.end(sid, elapsed=time.perf_counter() - 3.0)
+    """, "DB008", module="repro.serverless.fixture")
+    assert len(fs) == 1
+    assert "time.perf_counter" in fs[0].message
+
+
+def test_db008_clean_on_kernel_clock_and_bound_recorder():
+    assert active_for("""
+        def emit(rec, kernel):
+            rec.instant("tick", "kernel", "cpu:n0", t=kernel.now)
+            sid = rec.begin("phase", "phase", "lane")
+            rec.end(sid)
+            rec.complete("op", "storage", "n0", 0.0, kernel.now)
+    """, "DB008", module="repro.continuum.fixture") == []
+
+
+def test_db008_scope_excludes_measurement_harnesses():
+    # repro.launch is real wall-clock by design; DB008's scope is the
+    # simulator packages only
+    assert findings_for("""
+        import time
+        def emit(rec):
+            rec.log(time.time())
+    """, "DB008", module="repro.launch.dryrun") == []
+
+
+# ---------------------------------------------------------------------------
 # suppression pragma + allowlist mechanics
 # ---------------------------------------------------------------------------
 def test_pragma_suppresses_same_line():

@@ -57,7 +57,7 @@ def test_grow_admits_parked_waiters_immediately():
 
     def grow():
         yield 1.0
-        for p, label in cpu.set_capacity(3, kernel.now):
+        for p, label, _waited in cpu.set_capacity(3, kernel.now):
             kernel.wake(p, label)
 
     kernel.spawn(grow(), label="grow")
@@ -272,7 +272,7 @@ def _ev_read_run(grow_at=None, readers=6):
     if grow_at is not None:
         def grow():
             yield grow_at
-            for p, lab in pool.kvs("h").set_capacity(readers, kernel.now):
+            for p, lab, _w in pool.kvs("h").set_capacity(readers, kernel.now):
                 kernel.wake(p, lab)
         kernel.spawn(grow(), label="grow")
     kernel.run()

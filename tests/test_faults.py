@@ -94,7 +94,7 @@ def test_slot_drain_never_preempts_and_restore_readmits():
     assert res.unhold(t) is None                # frees drain; no re-grant
     assert res.unhold(t) is None
     woken = res.set_capacity(2, 5.0)            # restore re-admits
-    assert [label for _, label in woken] == ["a"]
+    assert [label for _, label, _w in woken] == ["a"]
     assert res.capacity == 2 and res._held == 1
 
 
@@ -144,6 +144,21 @@ def test_churn_replay_is_bit_identical():
     b = _churn_scenario(record_trace=True).run()
     assert a.trace == b.trace and len(a.trace) > 0
     assert a.latencies == b.latencies
+
+
+def test_fault_actions_logged_with_stable_labels():
+    """Every injector action lands in the kernel trace under a stable
+    ``fault:<action>:<target>`` label, so ``verify_replay`` (and a human
+    reading a divergence report) can line up churn across runs."""
+    a = _churn_scenario(record_trace=True).run()
+    labels = [lab for _, _, lab in a.trace]
+    for want in ("fault:drain:cloud0", "fault:restore:cloud0",
+                 "fault:drain:cloud1", "fault:restore:cloud1"):
+        assert want in labels
+    # the fault sub-stream replays at identical (t, seq, label)
+    b = _churn_scenario(record_trace=True).run()
+    pick = lambda tr: [e for e in tr if e[2].startswith("fault:")]
+    assert pick(a.trace) == pick(b.trace) and len(pick(a.trace)) == 4
 
 
 def test_churn_is_strictly_slower_never_lossy():

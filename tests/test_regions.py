@@ -155,11 +155,11 @@ def test_global_locate_home_first_then_nearest_replica():
     # fan-out would create; put() itself is last-write-wins)
     st.global_tier.shards.setdefault(home, {})[enc] = "A"
     st.global_tier.shards.setdefault(other, {})[enc] = "B"
-    val, serving = st._global_locate(g, enc, "edge0")
-    assert (val, serving) == ("A", home)          # home shard preferred
+    val, serving, home_hit = st._global_locate(g, enc, "edge0")
+    assert (val, serving, home_hit) == ("A", home, True)   # home preferred
     del st.global_tier.shards[home][enc]
-    val, serving = st._global_locate(g, enc, "edge0")
-    assert (val, serving) == ("B", other)         # cross-region fallback
+    val, serving, home_hit = st._global_locate(g, enc, "edge0")
+    assert (val, serving, home_hit) == ("B", other, False)  # x-region fb
 
 
 def _key_homed_on(st, clouds, target, address="edge0"):

@@ -22,6 +22,7 @@ from repro.scenario import (AutoscalePolicy, FaultPlan, NetworkSpec,
 from repro.serverless.engine import WorkflowEngine
 from repro.serverless.workflow import flood_workflow
 from repro.sim import ClosedLoop
+from repro.sim.faults import FaultEvent, NODE_DRAIN
 from repro.sim.workload import RegionalDiurnal
 
 
@@ -202,4 +203,23 @@ def test_scenario_report_row_shape():
     row = rep.row(parallel=2)
     assert row["system"] == "databelt" and row["parallel"] == 2
     assert set(row) >= {"throughput_rps", "p50_s", "p95_s", "p99_s",
-                        "mean_latency_s", "events"}
+                        "mean_latency_s", "global_fallback_rate",
+                        "events"}
+
+
+def test_global_fallback_rate_identical_across_collect_modes():
+    """The row's global_fallback_rate is a ratio of integer sums, so
+    aggregate collection reports exactly the full-mode value (a mean of
+    per-instance rates would not)."""
+    mk = lambda collect: Scenario(
+        strategy="stateless", n=32, input_bytes=2e6,
+        workload=WorkloadSpec(kind="closed_loop", clients=16),
+        faults=FaultPlan(events=[
+            FaultEvent(5.0, 4.0, NODE_DRAIN, node="cloud0")]),
+        collect=collect)
+    full = mk("full").run()
+    agg = mk("aggregate").run()
+    assert full.rep.global_fallback_rate > 0
+    assert agg.rep.global_fallback_rate == full.rep.global_fallback_rate
+    assert agg.row()["global_fallback_rate"] \
+        == full.row()["global_fallback_rate"]

@@ -1,0 +1,245 @@
+"""Flight recorder (repro.sim.trace): span/metric capture, latency
+attribution, Perfetto export, and the three contracts — off-by-default
+leaves the sim bit-identical, sim-clock timestamps only, and traced
+replays (including under churn) produce byte-identical span streams.
+"""
+import json
+import math
+
+from repro.core.slo import SLO
+from repro.scenario import (AutoscalePolicy, FaultPlan, NetworkSpec,
+                            Scenario, WorkloadSpec)
+from repro.sim.faults import FaultEvent, NODE_DRAIN
+from repro.sim.trace import MetricRegistry, SpanRecorder, TraceReport
+
+
+def _autoscale_scenario(**over) -> Scenario:
+    """Closed-loop pressure + a mid-run drain: trips every recorder
+    surface (phase spans, storage tiers, autoscale + fault instants)."""
+    kw = dict(
+        strategy="stateless", n=16, input_bytes=2e6,
+        workload=WorkloadSpec(kind="closed_loop", clients=8),
+        autoscale=AutoscalePolicy(interval_s=0.5, queue_high=1.0),
+        faults=FaultPlan(events=[
+            FaultEvent(5.0, 4.0, NODE_DRAIN, node="cloud0")]))
+    kw.update(over)
+    return Scenario(**kw)
+
+
+def _churn_scenario() -> Scenario:
+    return Scenario(
+        network=NetworkSpec(regions=2),
+        workload=WorkloadSpec(kind="regional_diurnal", rate=8.0,
+                              peak_to_trough=2.0, seed=11),
+        strategy="databelt", n=24, input_bytes=2e6,
+        faults=FaultPlan(events=[
+            FaultEvent(2.0, 5.0, NODE_DRAIN, node="cloud0"),
+            FaultEvent(4.0, 3.0, NODE_DRAIN, node="cloud1")]))
+
+
+# ---------------------------------------------------------------------------
+# units: registry + recorder mechanics
+# ---------------------------------------------------------------------------
+def test_metric_registry_instruments_and_snapshot():
+    m = MetricRegistry()
+    m.counter("ops").add()
+    m.counter("ops").add(2)
+    m.histogram("lat").observe(1.0)
+    m.histogram("lat").observe(3.0)
+    snap = m.snapshot()
+    assert snap["counters"] == {"ops": 3}
+    h = snap["histograms"]["lat"]
+    assert h == {"count": 2, "sum": 4.0, "min": 1.0, "max": 3.0,
+                 "mean": 2.0}
+    # empty histogram snapshots to zeros, not +/-inf
+    m.histogram("empty")
+    e = m.snapshot()["histograms"]["empty"]
+    assert e["min"] == 0.0 and e["max"] == 0.0 and e["mean"] == 0.0
+
+
+def test_recorder_span_lifecycle_and_report():
+    rec = SpanRecorder()
+    root = rec.begin("wf0", "instance", "inst:wf0", t=0.0)
+    child = rec.begin("fetch", "phase", "inst:wf0", parent=root, t=0.5)
+    rec.end(child, t=1.5, reads=3)
+    rec.complete("get", "storage", "cloud0", 0.6, 1.2, parent=child,
+                 tier="local")
+    rec.instant("grant", "kernel", "cpu:n0", t=0.5)
+    rec.end(root, t=2.0)
+    rep = rec.report()
+    assert [s.name for s in rep.spans] == ["wf0", "fetch", "get"]
+    by_name = {s.name: s for s in rep.spans}
+    assert by_name["fetch"].parent_id == by_name["wf0"].span_id
+    assert by_name["get"].parent_id == by_name["fetch"].span_id
+    assert by_name["fetch"].duration == 1.0
+    assert by_name["fetch"].attrs["reads"] == 3
+    assert rep.instants[0].name == "grant" and rep.instants[0].t == 0.5
+
+
+def test_report_closes_spans_left_open():
+    rec = SpanRecorder()
+    sid = rec.begin("wf0", "instance", "lane", t=1.0)
+    rep = rec.report()
+    span = rep.spans[0]
+    assert span.span_id == sid and span.t_end >= span.t_start
+
+
+# ---------------------------------------------------------------------------
+# traced runs: span coverage + attribution
+# ---------------------------------------------------------------------------
+def test_traced_run_emits_instance_phase_storage_spans():
+    rep = _autoscale_scenario().run(trace=True)
+    tr = rep.trace_report
+    assert isinstance(tr, TraceReport)
+    roots = [s for s in tr.spans if s.category == "instance"]
+    assert len(roots) == 16
+    ids = {s.span_id for s in tr.spans}
+    root_ids = {s.span_id for s in roots}
+    phases = [s for s in tr.spans if s.category == "phase"]
+    assert phases and all(s.parent_id in root_ids for s in phases)
+    assert {"fetch", "execute", "offload", "ingress"} <= {
+        s.name for s in phases}
+    storage = [s for s in tr.spans if s.category == "storage"]
+    assert storage and all(s.parent_id in ids for s in storage)
+    tiers = {s.attrs["tier"] for s in storage}
+    assert tiers <= {"local", "holder", "global-home", "global-fallback",
+                     "fused", "missing", "write-local", "write-remote"}
+    assert "write-local" in tiers
+    # queue-wait vs service attribution rides on every storage span
+    assert all("queue_wait_s" in s.attrs and "service_s" in s.attrs
+               for s in storage)
+    # instance roots get one Perfetto lane each
+    assert all(s.track == f"inst:{s.name}" for s in roots)
+    # metric registry fed alongside the spans
+    assert tr.metrics["counters"]["instances"] == 16
+    assert tr.metrics["counters"]["storage.tier.write-local"] > 0
+
+
+def test_breakdown_attributes_at_least_95_percent():
+    tr = _autoscale_scenario().run(trace=True).trace_report
+    bd = tr.breakdown()
+    assert bd["min_fraction"] >= 0.95
+    assert len(bd["instances"]) == 16
+    assert set(bd["per_phase_s"]) <= {"ingress", "cpu_wait", "fetch",
+                                      "execute", "offload"}
+    assert sum(bd["per_phase_s"].values()) > 0
+    for inst in bd["instances"]:
+        assert math.isclose(inst["attributed_s"],
+                            inst["fraction"] * inst["wall_s"],
+                            rel_tol=1e-9, abs_tol=1e-12)
+
+
+def test_slo_blame_names_a_dominant_phase_per_violating_instance():
+    sc = _autoscale_scenario(slo=SLO(max_handoff_s=0.0,
+                                     max_migration_s=0.0))
+    rep = sc.run(trace=True)
+    bd = rep.trace_report.breakdown()
+    violating = [i for i in bd["instances"] if i["slo_violations"] > 0]
+    assert violating, "tight SLO must produce violations"
+    assert sum(bd["slo_blame"].values()) == len(violating)
+    assert all(phase in bd["per_phase_s"] for phase in bd["slo_blame"])
+
+
+# ---------------------------------------------------------------------------
+# the determinism contracts
+# ---------------------------------------------------------------------------
+def test_trace_stream_bit_identical_across_replays_under_churn():
+    a = _churn_scenario().run(trace=True).trace_report
+    b = _churn_scenario().run(trace=True).trace_report
+    assert a.to_events() == b.to_events() and len(a.to_events()) > 0
+    assert a.metrics == b.metrics
+
+
+def test_tracing_off_is_the_default_and_on_changes_nothing():
+    traced = _autoscale_scenario().run(trace=True)
+    plain = _autoscale_scenario().run()
+    assert plain.trace_report is None
+    assert traced.latencies == plain.latencies
+    assert traced.rep.events_processed == plain.rep.events_processed
+    assert traced.rep.kvs_queues == plain.rep.kvs_queues
+
+
+# ---------------------------------------------------------------------------
+# infrastructure instants: autoscale + faults + kernel
+# ---------------------------------------------------------------------------
+def test_autoscale_instants_match_recorded_actions():
+    rep = _autoscale_scenario().run(trace=True)
+    tr = rep.trace_report
+    resizes = [i for i in tr.instants if i.name == "autoscale"]
+    assert len(resizes) == len(rep.autoscale.actions) > 0
+    for i in resizes:
+        assert i.category == "autoscale"
+        assert {"old", "new", "reason"} <= set(i.attrs)
+
+
+def test_fault_instants_ride_on_the_fault_track():
+    tr = _churn_scenario().run(trace=True).trace_report
+    names = [i.name for i in tr.instants if i.category == "fault"]
+    assert names.count("fault:drain") == 2
+    assert names.count("fault:restore") == 2
+    drains = [i for i in tr.instants if i.name == "fault:drain"]
+    assert {i.track for i in drains} == {"cloud0", "cloud1"}
+
+
+def test_kernel_grant_and_slot_wait_events_recorded():
+    tr = _autoscale_scenario().run(trace=True).trace_report
+    kernel_instants = {i.name for i in tr.instants
+                       if i.category == "kernel"}
+    assert "grant" in kernel_instants
+    # closed-loop pressure on capacity-1 CPUs must park someone
+    waits = [s for s in tr.spans if s.name == "slot_wait"]
+    assert waits and all(s.duration > 0 for s in waits)
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export
+# ---------------------------------------------------------------------------
+def test_perfetto_export_schema(tmp_path):
+    out = tmp_path / "trace.json"
+    tr = _autoscale_scenario().run(trace=True).trace_report
+    doc = tr.export_perfetto(str(out))
+    loaded = json.loads(out.read_text())   # strict JSON (no inf/NaN)
+    assert loaded == doc
+    ev = doc["traceEvents"]
+    assert {e["ph"] for e in ev} == {"M", "X", "i"}
+    pids = {e["pid"] for e in ev if e["ph"] != "M"}
+    named = {e["pid"] for e in ev if e["ph"] == "M"}
+    assert pids == named                   # every track gets a name row
+    assert all(e["dur"] >= 0 for e in ev if e["ph"] == "X")
+    assert all(e["s"] == "t" for e in ev if e["ph"] == "i")
+    assert doc["otherData"]["metrics"]["counters"]["instances"] == 16
+    # span count survives the export (plus one metadata row per track)
+    assert len(ev) == len(tr.spans) + len(tr.instants) + len(named)
+
+
+def test_export_stringifies_non_finite_attrs(tmp_path):
+    rec = SpanRecorder()
+    rec.complete("get", "storage", "n0", 0.0, 1.0, latency_s=math.inf)
+    out = tmp_path / "inf.json"
+    rec.report().export_perfetto(str(out))
+    doc = json.loads(out.read_text())
+    args = [e for e in doc["traceEvents"] if e["ph"] == "X"][0]["args"]
+    assert args["latency_s"] == "inf"
+
+
+# ---------------------------------------------------------------------------
+# front doors: sequential mode + existing recorder
+# ---------------------------------------------------------------------------
+def test_sequential_scenario_shares_one_recorder_across_kernels():
+    rep = Scenario(workload=WorkloadSpec(kind="sequential", spacing=90.0),
+                   strategy="random", n=4, input_bytes=2e6).run(trace=True)
+    tr = rep.trace_report
+    roots = [s for s in tr.spans if s.category == "instance"]
+    assert [s.name for s in roots] == [f"wf{i}" for i in range(4)]
+    # spans are stamped from each instance's own kernel clock, offset by
+    # the spacing the scenario applies to starts — not reset to zero
+    assert all(s.t_end > s.t_start for s in roots)
+    assert tr.metrics["counters"]["instances"] == 4
+
+
+def test_run_accepts_a_prebound_recorder():
+    rec = SpanRecorder()
+    rep = _autoscale_scenario().run(trace=rec)
+    assert rep.trace_report is not None
+    assert [s.category for s in rep.trace_report.spans].count(
+        "instance") == 16
