@@ -1,0 +1,86 @@
+"""Fig 20 (repo extension): DAG fan-out width x fusion at the fan-in.
+
+The ranked fan-out workflow (``split`` scatters 1/N chunks to
+``work#1..work#N``, a sync ``join`` gathers them) stresses two Databelt
+mechanisms at once: N siblings write to the region-sharded global tier
+concurrently, and the join's fan-in read either issues ONE ``get_fused``
+over all N branch states (fusion on) or N separate gets (fusion off).
+
+Sweep: width x {fused, unfused} x {databelt, stateless} -> p95 latency +
+mean storage ops per instance.  Gates (the merge-gated smoke): fused
+fan-in must save storage ops vs unfused at every width >= 3, and the DAG
+path must replay bit-identically under GlobalTier churn.
+"""
+from __future__ import annotations
+
+from benchmarks.common import FULL, emit
+from repro.scenario import FaultPlan, Scenario, WorkloadSpec
+
+WIDTHS = [2, 3, 4, 6] if FULL else [2, 3, 4]
+N = 24 if FULL else 12
+
+BASE = Scenario(workload=WorkloadSpec(kind="stagger", stagger=0.05),
+                n=N, input_bytes=4e6)
+
+
+def run():
+    rows, by = [], {}
+    for strat in ("databelt", "stateless"):
+        for width in WIDTHS:
+            for fusion, fd in (("on", 8), ("off", 1)):
+                sc = BASE.replace(strategy=strat,
+                                  workflow=f"fanout:{width}",
+                                  fusion_depth=fd)
+                r = sc.run()
+                row = {
+                    "strategy": strat, "width": width, "fusion": fusion,
+                    "p95_s": round(r.p95, 3),
+                    "mean_latency_s": round(r.mean_latency, 3),
+                    "storage_ops": round(
+                        r.mean_of(lambda m: m.storage_ops), 2),
+                    "reads": round(r.mean_of(lambda m: m.reads), 2),
+                }
+                rows.append(row)
+                by[(strat, width, fusion)] = row
+
+    # gate 1: the fused fan-in read saves storage ops at width >= 3
+    for width in WIDTHS:
+        if width < 3:
+            continue
+        fused = by[("databelt", width, "on")]["storage_ops"]
+        unfused = by[("databelt", width, "off")]["storage_ops"]
+        assert fused < unfused, (
+            f"fan-in fusion saved nothing at width {width}: "
+            f"{fused} vs {unfused} ops")
+
+    # gate 2: DAG replay stays bit-identical under GlobalTier churn
+    churn = BASE.replace(strategy="databelt", workflow="conditional",
+                         fusion_depth=4,
+                         workload=WorkloadSpec(kind="poisson", rate=2.0),
+                         faults=FaultPlan.poisson(
+                             rate=0.05, outage_s=4.0,
+                             targets=("cloud0",), horizon_s=10.0,
+                             seed=7),
+                         record_trace=True)
+    a, b = churn.run(), churn.run()
+    assert a.trace == b.trace and len(a.trace) > 0, \
+        "DAG replay diverged under churn"
+
+    wmax = WIDTHS[-1]
+    derived = {
+        "fused_ops_w3": by[("databelt", 3, "on")]["storage_ops"],
+        "unfused_ops_w3": by[("databelt", 3, "off")]["storage_ops"],
+        f"ops_saved_w{wmax}": round(
+            by[("databelt", wmax, "off")]["storage_ops"]
+            - by[("databelt", wmax, "on")]["storage_ops"], 2),
+        f"databelt_p95_w{wmax}": by[("databelt", wmax, "on")]["p95_s"],
+        f"stateless_p95_w{wmax}": by[("stateless", wmax, "on")]["p95_s"],
+        "replay_events": len(a.trace),
+    }
+    emit("fig20_dag", by[("databelt", wmax, "on")]["p95_s"] * 1e6,
+         derived, {"rows": rows, "widths": WIDTHS, "n": N})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

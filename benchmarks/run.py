@@ -33,7 +33,7 @@ def _figures():
     from benchmarks import (bench_kernels, bench_transfer, fig2_state_share,
                             fig10_availability, fig13_throughput,
                             fig14_autoscale, fig16_service_scale,
-                            fig17_multiregion, fig18_churn,
+                            fig17_multiregion, fig18_churn, fig20_dag,
                             table2_propagation, table3_scalability,
                             table4_fusion)
     return [
@@ -47,6 +47,7 @@ def _figures():
         ("fig16_service_scale", fig16_service_scale.run),
         ("fig17_multiregion", fig17_multiregion.run),
         ("fig18_churn", fig18_churn.run),
+        ("fig20_dag", fig20_dag.run),
         ("bench_transfer", bench_transfer.run),
         ("bench_kernels", bench_kernels.run),
     ]
@@ -77,6 +78,14 @@ def _scenarios() -> dict:
         "workload": {"kind": "regional_diurnal", "rate": 8.0,
                      "seed": 11},
         "faults": churn,
+    }
+    # DAG smoke: ranked fan-out through a fused sync join — exercises the
+    # concurrent-branch engine path and the workflow-shape axis of the
+    # serialization contract
+    specs["smoke-dag"] = {
+        "strategy": "databelt", "n": 12, "input_bytes": 2e6,
+        "workflow": "fanout:3", "fusion_depth": 4,
+        "workload": {"kind": "stagger", "stagger": 0.05},
     }
     # fig14-style smoke: closed-loop pressure trips the autoscaler and a
     # mid-run drain fires the fault path, so a traced run of this spec

@@ -40,6 +40,19 @@ def run():
     def pick(state, system, depth):
         return next(r for r in rows if r["state"] == state and
                     r["system"] == system and r["depth"] == depth)
+    # fan-in fusion (DAG subsystem): at a sync join whose predecessors
+    # share a runtime, Databelt fuses the N branch reads into ONE
+    # get_fused — measured on the ranked fan-out workflow
+    # (split -> work#1..#3 -> join)
+    fanin = {}
+    for system, fd in (("databelt", 4), ("baseline", 1)):
+        sc = BASE.replace(strategy="databelt", workflow="fanout:3",
+                          fusion_depth=fd, input_bytes=10e6)
+        r = sc.run()
+        fanin[system] = {
+            "function_s": round(r.mean_of(lambda m: m.latency), 3),
+            "storage_ops": round(r.mean_of(lambda m: m.storage_ops), 1),
+        }
     d5 = pick("stateless", "databelt", 5)
     b5 = pick("stateless", "baseline", 5)
     d5f = pick("stateful", "databelt", 5)
@@ -51,9 +64,13 @@ def run():
             round(100 * (1 - d5f["function_s"] / b5f["function_s"]), 1),
         "fused_storage_ops_depth5": d5["storage_ops"],
         "baseline_storage_ops_depth5": b5["storage_ops"],
+        "fanin_fused_ops_w3": fanin["databelt"]["storage_ops"],
+        "fanin_unfused_ops_w3": fanin["baseline"]["storage_ops"],
+        "fanin_ops_saved_w3": round(fanin["baseline"]["storage_ops"]
+                                    - fanin["databelt"]["storage_ops"], 1),
     }
     emit("table4_fusion", d5["function_s"] * 1e6, derived,
-         {"rows": rows,
+         {"rows": rows, "fanin_w3": fanin,
           "paper_reference": {"stateless_cut_pct": 20,
                               "stateful_cut_pct": 19,
                               "storage_ops": "constant vs linear"}})

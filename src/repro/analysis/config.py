@@ -34,6 +34,8 @@ CHECK_CATALOG: Dict[str, str] = {
     "DB007": "SlotResource acquire without a matching release",
     "DB008": "telemetry/span emission timestamped from the host clock "
              "instead of the kernel clock",
+    "DB009": "kernel child-process spawn/wake scheduled from unordered "
+             "(set) iteration — branch joins would not replay",
 }
 
 
@@ -142,6 +144,10 @@ def default_config() -> AnalysisConfig:
             # breaks trace replay without breaking the sim itself
             "DB008": ["repro.sim*", "repro.serverless*",
                       "repro.continuum*"],
+            # the DAG scheduler's contract: child kernel processes
+            # (workflow branches) spawn in deterministic order so sync
+            # barriers join replay-identically
+            "DB009": ["repro.serverless*"],
         },
         allowlist={
             # compile/measurement harness: lower+compile timings are

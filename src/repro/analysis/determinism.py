@@ -232,3 +232,54 @@ class UnorderedIterationChecker(Checker):
                                  ast.ClassDef, ast.Lambda)):
                 continue
             stack.extend(ast.iter_child_nodes(node))
+
+
+@register_checker
+class SpawnOrderChecker(Checker):
+    """DB009 — kernel child-process scheduling from unordered iteration.
+
+    The DAG scheduler (``repro.serverless.dag`` / ``engine._dag_run``)
+    runs workflow branches as concurrent child kernel processes; the
+    order of ``kernel.spawn``/``kernel.wake`` calls assigns heap
+    sequence numbers, which break same-timestamp ties.  Spawning or
+    waking from a set-typed iterable therefore makes branch scheduling
+    — and the barrier join order behind it — vary between runs even
+    under the same seed.  DB003 already flags set iteration broadly in
+    ``repro.sim``; this check pins the specific contract that child
+    processes inside ``repro.serverless*`` join deterministically.
+    """
+
+    CODE = "DB009"
+    HINT = ("schedule branch children from a deterministically ordered "
+            "sequence (topo-ordered list, dict, deque) — never from a "
+            "set")
+
+    def check(self, unit: ModuleUnit) -> List[Finding]:
+        out: List[Finding] = []
+        scopes = [unit.tree] + [
+            n for n in ast.walk(unit.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        walk = UnorderedIterationChecker._walk_scope
+        for scope in scopes:
+            nodes = list(walk(scope))
+            set_vars: Set[str] = set()
+            for stmt in nodes:
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                        and isinstance(stmt.targets[0], ast.Name) \
+                        and _returns_set(stmt.value, set_vars):
+                    set_vars.add(stmt.targets[0].id)
+            for node in nodes:
+                if not isinstance(node, ast.For) or \
+                        not _returns_set(node.iter, set_vars):
+                    continue
+                for inner in ast.walk(node):
+                    if isinstance(inner, ast.Call) and \
+                            isinstance(inner.func, ast.Attribute) and \
+                            inner.func.attr in ("spawn", "wake"):
+                        out.append(self.finding(
+                            unit, inner,
+                            f"kernel `.{inner.func.attr}(...)` inside "
+                            f"iteration over a set — branch spawn "
+                            f"order (heap sequence numbers) would "
+                            f"differ between runs of the same seed"))
+        return out

@@ -37,12 +37,22 @@ class FusionGroup:
 
 def plan_fusion_groups(order: Sequence[str], placement: Dict[str, str],
                        trusted: Dict[str, bool] | None = None,
-                       max_depth: int = 0) -> List[FusionGroup]:
+                       max_depth: int = 0, dag=None) -> List[FusionGroup]:
     """Greedy grouping of consecutive co-located trusted functions.
 
     ``order``: functions in topological order; ``placement``: fn -> node.
     ``max_depth``: 0 = unlimited.
-    """
+
+    ``dag`` (optional): a ``Workflow``-like object exposing
+    ``predecessors``/``successors``/``conditions``/``sync``.  When given,
+    a function additionally fuses only when it extends a *linear run* —
+    its sole predecessor is the group's tail and it is that tail's sole
+    successor — and never across a conditional edge or into a sync
+    barrier (the group is one sandbox executing sequentially; a branch
+    point, a skippable edge, or a barrier must schedule as its own
+    group).  Chains are linear runs, so ``dag=None`` — the engine's
+    sequential path — and a chain-shaped ``dag`` produce the same
+    groups."""
     groups: List[FusionGroup] = []
     cur: List[str] = []
     cur_node = None
@@ -55,6 +65,15 @@ def plan_fusion_groups(order: Sequence[str], placement: Dict[str, str],
             cur = []
             cur_node = None
 
+    def extends_run(f: str) -> bool:
+        if dag is None or not cur:
+            return True
+        tail = cur[-1]
+        return (dag.predecessors(f) == [tail]
+                and dag.successors(tail) == [f]
+                and (tail, f) not in dag.conditions
+                and f not in dag.sync)
+
     for f in order:
         node = placement.get(f)
         ok = node is not None and (trusted is None or trusted.get(f, True))
@@ -65,7 +84,8 @@ def plan_fusion_groups(order: Sequence[str], placement: Dict[str, str],
                                           node))
             continue
         if cur and (node != cur_node or
-                    (max_depth and len(cur) >= max_depth)):
+                    (max_depth and len(cur) >= max_depth) or
+                    not extends_run(f)):
             flush()
         if not cur:
             cur_node = node

@@ -204,13 +204,36 @@ def plan_workflow(graph: TopologyGraph, wf: WorkflowSpec, slo: SLO,
     # hops_map(src)[n] exactly hops(src, n), so the score below is
     # bit-identical to the per-pair form it replaces.
     srcinfo: Dict[str, tuple] = {}
-    for idx, f in enumerate(order):
+    for f in order:
         preds = wf.predecessors(f)
         anchor = placement.get(preds[0]) if preds else entry_node
         anchor = anchor or entry_node
-        is_sink = idx == len(order) - 1 and wf.sink_kind
-        cands = [cloud] if is_sink and cloud in graph.nodes else \
-            vicinity_of_kinds(graph, anchor, radius_s, compute_kinds)
+        # R-6 sink gravity applies to every terminal function: in a
+        # linear workflow that is exactly the last topo entry (the old
+        # rule), in a branching one every branch tip sinks to its cloud
+        is_sink = wf.sink_kind and not wf.successors(f)
+        if is_sink and cloud in graph.nodes:
+            cands = [cloud]
+        else:
+            placed_srcs = [placement[p] for p in preds
+                           if p in placement]
+            if len(placed_srcs) > 1:
+                # branch-aware fan-in: candidates from EVERY placed
+                # predecessor's vicinity (first-appearance order, so
+                # the scan is deterministic), letting the R-4 handoff
+                # cost over all branches pick the join node instead of
+                # anchoring blindly on the first branch
+                seen: Dict[str, bool] = {}
+                cands = []
+                for src in placed_srcs:
+                    for c in vicinity_of_kinds(graph, src, radius_s,
+                                               compute_kinds):
+                        if c not in seen:
+                            seen[c] = True
+                            cands.append(c)
+            else:
+                cands = vicinity_of_kinds(graph, anchor, radius_s,
+                                          compute_kinds)
         considered += len(cands)
         anchor_home = 0.0
         if home_dists:

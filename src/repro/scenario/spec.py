@@ -46,6 +46,8 @@ from repro.continuum.regions import (MultiConstellation, ShellSpec,
 from repro.continuum.session import MODES
 from repro.core.slo import SLO
 from repro.core.strategy import StateStrategy
+from repro.serverless.dag import (branch_workflow, conditional_workflow,
+                                  diamond_workflow, fanout_workflow)
 from repro.serverless.engine import WorkflowEngine
 from repro.serverless.workflow import (Workflow, chain_workflow,
                                        flood_workflow)
@@ -175,15 +177,33 @@ class WorkloadSpec:
 def workflow_maker(spec: str) -> Callable[[str], Workflow]:
     """Resolve a workflow spec string into a ``wid -> Workflow`` factory.
     ``"flood"`` is the paper's flood-disaster DAG; ``"chain:<depth>"`` is
-    the linear fusion chain (Table 4)."""
+    the linear fusion chain (Table 4).  The DAG shape axes
+    (``repro.serverless.dag``): ``"branch:<width>"`` (independent
+    terminal branches), ``"diamond:<width>"`` (fork/join with a sync
+    barrier), ``"fanout:<width>"`` (ranked fan-out — N chunked siblings
+    into a sync join), ``"conditional"`` (exactly one of two branches
+    runs per instance; the skipped one releases the join barrier)."""
     name, _, arg = spec.partition(":")
     if name == "flood":
         return flood_workflow
     if name == "chain":
         depth = int(arg) if arg else 3
         return lambda wid: chain_workflow(wid, depth)
+    if name == "branch":
+        width = int(arg) if arg else 2
+        return lambda wid: branch_workflow(wid, width)
+    if name == "diamond":
+        width = int(arg) if arg else 2
+        return lambda wid: diamond_workflow(wid, width)
+    if name == "fanout":
+        width = int(arg) if arg else 3
+        return lambda wid: fanout_workflow(wid, width)
+    if name == "conditional":
+        return conditional_workflow
     raise ValueError(f"unknown workflow {spec!r}; known: 'flood', "
-                     f"'chain:<depth>'")
+                     f"'chain:<depth>', 'branch:<width>', "
+                     f"'diamond:<width>', 'fanout:<width>', "
+                     f"'conditional'")
 
 
 # ---------------------------------------------------------------------------

@@ -1,2 +1,5 @@
 from repro.serverless.workflow import ServerlessFunction, Workflow  # noqa: F401
+from repro.serverless.dag import (DagEdge, build_dag,  # noqa: F401
+                                  branch_workflow, conditional_workflow,
+                                  diamond_workflow, fanout_workflow)
 from repro.serverless.engine import WorkflowEngine, InstanceMetrics  # noqa: F401

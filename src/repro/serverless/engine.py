@@ -45,12 +45,13 @@ from repro.core.keys import StateKey
 from repro.core.planner import WorkflowSpec, plan_workflow, undo_plan
 from repro.core.slo import SLO
 from repro.core.strategy import make_strategy
+from repro.serverless.dag import DagSchedule, plan_dag_groups
 from repro.serverless.workflow import Workflow, make_payload
 from repro.sim.autoscale import AutoscalePolicy, Autoscaler
 from repro.sim.faults import FaultInjector, FaultPlan
 from repro.sim.kernel import SimKernel
 from repro.sim.metrics import FleetAggregate, ParallelReport
-from repro.sim.resources import ResourcePool
+from repro.sim.resources import ResourcePool, SlotResource
 from repro.sim.trace import SpanRecorder
 from repro.sim.workload import UniformStagger, iter_arrivals
 
@@ -233,7 +234,14 @@ class WorkflowEngine:
                     > self.slo.max_handoff_s:
                 m.slo_violations += 1
         t_fetch = kernel.now
-        if len(g.function_ids) > 1:
+        # a fused read serves two shapes: a multi-function group (chain
+        # fusion) and — when fusion is on — a fan-in whose single
+        # function consumes several branch states sharing its runtime
+        # (ONE get_fused over all branch states, paper §4.2 extended to
+        # DAGs).  Chains never have multi-predecessor functions, so the
+        # fan-in arm is unreachable on the pinned linear path.
+        if len(g.function_ids) > 1 or \
+                (self.fusion_depth > 1 and len(need) > 1):
             _, res = yield from session.get_fused(need, node)
             m.storage_ops += len({k.storage_address for k in need
                                   if k.storage_address != node} or {1})
@@ -274,6 +282,10 @@ class WorkflowEngine:
             fn = wf.fn(fname)
             preds = wf.predecessors(fname) or ["__input__"]
             in_bytes = sum(run.sizes.get(p, 0.0) for p in preds)
+            if wf.chunk:
+                # ranked sibling: consumes its 1/N chunk of the
+                # predecessor's output (empty for every linear chain)
+                in_bytes *= wf.chunk.get(fname, 1.0)
             ct = fn.virtual_compute_time(in_bytes)
             if self.real_compute and fn.compute is not None:
                 merged = {}
@@ -351,6 +363,131 @@ class WorkflowEngine:
                     yield pending
 
     # ------------------------------------------------------------------
+    # DAG execution: branches as concurrent child kernel processes
+    # ------------------------------------------------------------------
+    def _condition_payload(self, run: _InstanceRun, src: str) -> dict:
+        """Payload a conditional edge's predicate sees when ``src``
+        completes: the real function output when ``real_compute``
+        produced one, over a deterministic synthetic base (workflow id,
+        source name, produced bytes) so virtual-compute conditions stay
+        replay-stable."""
+        base = {"workflow_id": run.wf.workflow_id, "function": src,
+                "out_bytes": run.sizes.get(src, 0.0)}
+        pl = run.payloads.get(src)
+        if isinstance(pl, dict):
+            base.update(pl)
+        return base
+
+    def _dag_run(self, kernel: SimKernel, run: _InstanceRun, gg, rec,
+                 root, lane: str):
+        """Run a non-linear workflow: every fusion group is a child
+        kernel process sharing the instance's storage, key/size maps and
+        metrics; the last-resolving predecessor launches each successor
+        group (dataflow — joins never poll) and a ``DagSchedule``
+        settles conditional skips so a skipped branch releases its sync
+        barrier deterministically.  The instance process itself parks on
+        a capacity-0 join latch; the last finishing group opens it —
+        the same drain/grow machinery the autoscaler already replays
+        deterministically.
+
+        Tracing: each group gets its own lane (``inst:<wid>/<gid>``) so
+        branches render as parallel tracks under the shared root span,
+        plus a ``barrier_wait`` span from a join's first-arrived edge to
+        its launch.  Children use per-branch ``StateSession`` facades
+        over the same storage, so concurrent storage-op spans nest under
+        the right branch's phase span."""
+        wf, m = run.wf, run.metrics
+        sched = DagSchedule(gg, wf)
+        latch = SlotResource(f"dag:{wf.workflow_id}", 1)
+        latch.set_capacity(0, kernel.now)
+
+        def eval_edge(u: str, v: str) -> bool:
+            cond = wf.conditions.get((u, v))
+            if cond is None:
+                return True
+            return bool(cond(self._condition_payload(run, u)))
+
+        def launch(g, t_first):
+            if rec is not None and t_first is not None \
+                    and kernel.now > t_first \
+                    and len(gg.preds[g.group_id]) > 1:
+                rec.complete("barrier_wait", "phase",
+                             f"{lane}/{g.group_id}", t_first, kernel.now,
+                             parent=root, node=g.node_id,
+                             group=g.group_id)
+            kernel.spawn(group_proc(g),
+                         label=f"{wf.workflow_id}:{g.group_id}")
+
+        def settle(gid: str):
+            spawns, skips = sched.resolve(gid, kernel.now, eval_edge)
+            for sgid in skips:
+                kernel.log(f"{wf.workflow_id}:skip:{sgid}")
+                if rec is not None:
+                    rec.instant("branch_skip", "phase", lane, group=sgid)
+            for g, t_first in spawns:
+                launch(g, t_first)
+            if sched.remaining == 0:
+                for proc, lbl, _w in latch.set_capacity(1, kernel.now):
+                    kernel.wake(proc, lbl)
+
+        def group_proc(g):
+            # per-branch session facade: same storage/kernel/mode (ONE
+            # continuous data path), private trace_parent so concurrent
+            # branches attribute their storage spans correctly
+            grun = _InstanceRun(
+                wf=wf, session=StateSession(self.storage, kernel,
+                                            mode=self.mode),
+                placement=run.placement, metrics=m, keys=run.keys,
+                sizes=run.sizes, payloads=run.payloads)
+            glane = f"{lane}/{g.group_id}" if rec is not None else lane
+            cpu = self.resources.cpu(g.node_id)
+            t_acq = kernel.now
+            yield ("acquire", cpu)
+            if rec is not None and kernel.now > t_acq:
+                rec.complete("cpu_wait", "phase", glane, t_acq,
+                             kernel.now, parent=root, node=g.node_id)
+            kernel.log(f"{wf.workflow_id}:start:{g.group_id}")
+            sid = None
+            if rec is not None:
+                r0, h0 = m.reads, len(m.hops)
+                g0, rt0 = m.global_reads, m.read_time
+                sid = rec.begin("fetch", "phase", glane, parent=root,
+                                node=g.node_id, group=g.group_id)
+                grun.session.trace_parent = sid
+            yield from self._fetch_group(kernel, grun, g)
+            if rec is not None:
+                rec.end(sid, reads=m.reads - r0,
+                        hops=max(m.hops[h0:], default=0),
+                        global_reads=m.global_reads - g0,
+                        read_time_s=m.read_time - rt0)
+                c0 = m.compute_time
+                sid = rec.begin("execute", "phase", glane, parent=root,
+                                node=g.node_id, group=g.group_id,
+                                functions=len(g.function_ids))
+                grun.session.trace_parent = sid
+            yield from self._execute_group(kernel, grun, g)
+            if rec is not None:
+                rec.end(sid, compute_time_s=m.compute_time - c0)
+                w0, s0 = m.write_time, m.storage_ops
+                sid = rec.begin("offload", "phase", glane, parent=root,
+                                node=g.node_id, group=g.group_id)
+                grun.session.trace_parent = sid
+            yield from self._offload_group(kernel, grun, g)
+            if rec is not None:
+                rec.end(sid, write_time_s=m.write_time - w0,
+                        storage_ops=m.storage_ops - s0)
+            kernel.log(f"{wf.workflow_id}:done:{g.group_id}")
+            yield ("release", cpu)
+            settle(g.group_id)
+
+        for g in gg.entry_groups():
+            launch(g, None)
+        if sched.remaining:
+            # park until the last group (or skip cascade) opens the latch
+            yield ("acquire", latch)
+            yield ("release", latch)
+
+    # ------------------------------------------------------------------
     def _instance_proc(self, kernel: SimKernel, wf: Workflow,
                        input_bytes: float, entry: str,
                        m: InstanceMetrics):
@@ -360,8 +497,19 @@ class WorkflowEngine:
         t0 = kernel.now
         session = StateSession(self.storage, kernel, mode=self.mode)
         placement = self.place_functions(wf, kernel.now, entry)
-        groups = plan_fusion_groups(wf.order(), placement,
-                                    max_depth=self.fusion_depth)
+        # linear workflows (every chain, the flood DAG's path) keep the
+        # sequential pre-DAG path verbatim — same events, same sequence
+        # numbers, bit-identical goldens.  Real DAGs run branches as
+        # concurrent child processes joining at sync barriers.
+        linear = wf.is_linear
+        if linear:
+            gg = None
+            groups = plan_fusion_groups(wf.order(), placement,
+                                        max_depth=self.fusion_depth)
+        else:
+            gg = plan_dag_groups(wf, placement,
+                                 max_depth=self.fusion_depth)
+            groups = gg.groups
         run = _InstanceRun(wf=wf, session=session, placement=placement,
                            metrics=m)
 
@@ -392,6 +540,10 @@ class WorkflowEngine:
         run.sizes["__input__"] = input_bytes
         if self.real_compute:
             run.payloads["__input__"] = make_payload(input_bytes)
+
+        if not linear:
+            yield from self._dag_run(kernel, run, gg, rec, root, lane)
+            groups = ()   # the DAG scheduler ran them all
 
         for g in groups:
             # claim a CPU slot on the node (contention model) for the

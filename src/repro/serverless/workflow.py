@@ -6,6 +6,7 @@ CNN over EO-satellite SAR tiles — both as real JAX compute.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -35,16 +36,37 @@ class Workflow:
     functions: List[ServerlessFunction]
     edges: List[Tuple[str, str]]
     sink_in_cloud: bool = True   # final function gravitates to the cloud
+    # DAG semantics (``repro.serverless.dag``).  Empty defaults keep a
+    # linear chain on the engine's sequential path bit-identically:
+    # ``conditions`` maps an edge to a ``payload -> bool`` predicate (the
+    # destination is skipped when it returns False), ``sync`` names
+    # explicit barrier functions that wait for ALL predecessors to
+    # resolve but run when ANY of them is live, ``chunk`` gives a ranked
+    # sibling the fraction of its predecessor's output it consumes.
+    conditions: Dict[Tuple[str, str], Callable[[dict], bool]] = \
+        field(default_factory=dict)
+    sync: Tuple[str, ...] = ()
+    chunk: Dict[str, float] = field(default_factory=dict)
 
     def __post_init__(self):
+        self.sync = tuple(self.sync)
         self._validate_edges()
 
     def _validate_edges(self) -> None:
         """Every edge endpoint must name a declared function — an edge on
         an unknown name would otherwise surface as a bare ``KeyError``
         deep inside ``order()`` (or silently never fire for an unknown
-        source)."""
-        names = {f.name for f in self.functions}
+        source).  Duplicate function names raise too: ``fn()`` and the
+        edge maps would silently resolve to the first declaration while
+        the engine executed both."""
+        declared = [f.name for f in self.functions]
+        names = set(declared)
+        if len(names) != len(declared):
+            dup = sorted({n for n in declared if declared.count(n) > 1})
+            raise ValueError(
+                f"workflow {self.workflow_id!r} declares duplicate "
+                f"function name(s) {dup}; every function needs a unique "
+                f"name (ranked siblings are suffixed '#k')")
         unknown = sorted({n for e in self.edges for n in e
                           if n not in names})
         if unknown:
@@ -52,6 +74,23 @@ class Workflow:
                 f"workflow {self.workflow_id!r} has edges naming unknown "
                 f"function(s) {unknown}; declared functions: "
                 f"{sorted(names)}")
+        if self.conditions:
+            edges = set(self.edges)
+            bad = sorted(e for e in self.conditions if e not in edges)
+            if bad:
+                raise ValueError(
+                    f"workflow {self.workflow_id!r} has conditions on "
+                    f"non-edges {bad}")
+        bad_sync = sorted(n for n in self.sync if n not in names)
+        if bad_sync:
+            raise ValueError(
+                f"workflow {self.workflow_id!r} marks unknown "
+                f"function(s) {bad_sync} as sync barriers")
+        bad_chunk = sorted(n for n in self.chunk if n not in names)
+        if bad_chunk:
+            raise ValueError(
+                f"workflow {self.workflow_id!r} assigns chunk fractions "
+                f"to unknown function(s) {bad_chunk}")
 
     def _edge_memo(self):
         """Memoized (predecessor lists, successor lists, fn-by-name).
@@ -71,9 +110,9 @@ class Workflow:
         for i, j in self.edges:
             preds.setdefault(j, []).append(i)
             succs.setdefault(i, []).append(j)
-        byname: Dict[str, ServerlessFunction] = {}
-        for f in self.functions:
-            byname.setdefault(f.name, f)      # first match wins, like fn()
+        # duplicate names raise in _validate_edges, so this is unambiguous
+        byname: Dict[str, ServerlessFunction] = {f.name: f
+                                                 for f in self.functions}
         memo = (preds, succs, byname)
         self.__dict__["_edges_memo"] = (guard, memo)
         return memo
@@ -88,27 +127,51 @@ class Workflow:
         """Topological order of the workflow DAG.  Raises ``ValueError``
         naming the offending nodes when ``edges`` contain a cycle (a
         truncated order would silently drop every function downstream of
-        the cycle) or reference an unknown function."""
+        the cycle) or reference an unknown function.
+
+        Runs on the memoized successor lists with a deque frontier —
+        the old form rescanned the full edge list once per frontier node
+        (O(V*E)) and popped the frontier head from a list.  The
+        successor lists preserve edge order, so the produced order is
+        *identical* to the edge-rescan form on every workflow (pinned in
+        ``tests/test_dag.py`` against the naive reference)."""
         self._validate_edges()
+        _, succs, _ = self._edge_memo()
         names = [f.name for f in self.functions]
         indeg = {n: 0 for n in names}
         for _, j in self.edges:
             indeg[j] += 1
-        out, frontier = [], [n for n in names if indeg[n] == 0]
+        out: List[str] = []
+        frontier = deque(n for n in names if indeg[n] == 0)
         while frontier:
-            n = frontier.pop(0)
+            n = frontier.popleft()
             out.append(n)
-            for i, j in self.edges:
-                if i == n:
-                    indeg[j] -= 1
-                    if indeg[j] == 0:
-                        frontier.append(j)
+            for j in succs[n]:
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    frontier.append(j)
         if len(out) < len(names):
             stuck = sorted(n for n in names if n not in out)
             raise ValueError(
                 f"workflow {self.workflow_id!r} edges contain a cycle "
                 f"through {stuck}; these functions would never execute")
         return out
+
+    @property
+    def is_linear(self) -> bool:
+        """True when the workflow is a simple path — every function has
+        at most one predecessor and one successor, no conditional edges,
+        no sync barriers.  Linear workflows take the engine's sequential
+        chain path (bit-identical to the pre-DAG engine); anything else
+        runs branches as concurrent child kernel processes via
+        ``repro.serverless.dag``."""
+        if self.conditions or self.sync:
+            return False
+        preds, succs, _ = self._edge_memo()
+        for f in self.functions:
+            if len(preds[f.name]) > 1 or len(succs[f.name]) > 1:
+                return False
+        return True
 
     def predecessors(self, name: str) -> List[str]:
         """Upstream function names, in edge order.  Read-only."""

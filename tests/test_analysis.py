@@ -356,6 +356,51 @@ def test_db008_scope_excludes_measurement_harnesses():
 
 
 # ---------------------------------------------------------------------------
+# DB009 — kernel child spawns scheduled from set iteration
+# ---------------------------------------------------------------------------
+def test_db009_flags_spawn_from_set_iteration():
+    fs = active_for("""
+        def launch(kernel, branches):
+            ready = set(branches)
+            for b in ready:
+                kernel.spawn(b.proc(), label=b.name)
+    """, "DB009", module="repro.serverless.fixture")
+    assert len(fs) == 1
+    assert ".spawn(" in fs[0].message
+
+
+def test_db009_flags_wake_from_set_algebra():
+    fs = active_for("""
+        def release(kernel, waiting, done):
+            for w in set(waiting) - set(done):
+                kernel.wake(w.proc, w.label)
+    """, "DB009", module="repro.serverless.fixture")
+    assert len(fs) == 1
+    assert ".wake(" in fs[0].message
+
+
+def test_db009_clean_on_ordered_scheduling():
+    # the shipped pattern: topo-ordered lists / dicts / sorted sets
+    assert active_for("""
+        def launch(kernel, branches, pending):
+            for b in branches:
+                kernel.spawn(b.proc(), label=b.name)
+            for b in sorted(set(pending)):
+                kernel.spawn(b.proc(), label=b.name)
+    """, "DB009", module="repro.serverless.fixture") == []
+
+
+def test_db009_scoped_to_serverless():
+    # DB003 still covers repro.sim; DB009 pins the serverless DAG
+    # scheduler specifically
+    assert findings_for("""
+        def launch(kernel, branches):
+            for b in set(branches):
+                kernel.spawn(b.proc(), label=b.name)
+    """, "DB009", module="repro.core.fixture") == []
+
+
+# ---------------------------------------------------------------------------
 # suppression pragma + allowlist mechanics
 # ---------------------------------------------------------------------------
 def test_pragma_suppresses_same_line():

@@ -1,0 +1,340 @@
+"""DAG workflow subsystem (repro.serverless.dag + engine integration):
+validation, topological order pinning, branch concurrency, conditional
+skips, sync barriers, ranked fan-out, fused fan-in, replay determinism.
+
+The chain path is gated behind ``Workflow.is_linear`` and must stay
+bit-identical — the goldens in test_engine/test_scenario pin that; here
+we pin the DAG semantics themselves.
+"""
+import zlib
+
+import pytest
+
+from repro.continuum.network import ContinuumNetwork
+from repro.continuum.orbits import Constellation
+from repro.core.keys import StateKey
+from repro.scenario import FaultPlan, Scenario, WorkloadSpec
+from repro.serverless.dag import (DagEdge, DagSchedule, branch_workflow,
+                                  build_dag, conditional_workflow,
+                                  diamond_workflow, fanout_workflow,
+                                  plan_dag_groups)
+from repro.serverless.engine import WorkflowEngine
+from repro.serverless.workflow import (ServerlessFunction, Workflow,
+                                       chain_workflow, flood_workflow)
+from repro.sim.trace import SpanRecorder
+
+
+@pytest.fixture(scope="module")
+def net():
+    return ContinuumNetwork(Constellation(n_planes=8, sats_per_plane=8))
+
+
+def _fn(name, out_ratio=1.0):
+    return ServerlessFunction(name, None, out_ratio=out_ratio)
+
+
+def _wid_with_parity(even: bool, prefix="w") -> str:
+    """First workflow id whose CRC32 parity matches (the conditional
+    builder's per-instance coin)."""
+    return next(f"{prefix}{i}" for i in range(64)
+                if (zlib.crc32(f"{prefix}{i}".encode()) % 2 == 0) is even)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1 — order(): deque rebuild pinned to the naive reference
+# ---------------------------------------------------------------------------
+def naive_order(wf):
+    """The pre-optimization algorithm (full-edge rescans, list pop(0)),
+    kept verbatim as the order oracle."""
+    names = [f.name for f in wf.functions]
+    indeg = {n: 0 for n in names}
+    for _, j in wf.edges:
+        indeg[j] += 1
+    out, frontier = [], [n for n in names if indeg[n] == 0]
+    while frontier:
+        n = frontier.pop(0)
+        out.append(n)
+        for i, j in wf.edges:
+            if i == n:
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    frontier.append(j)
+    return out
+
+
+def test_order_identical_to_naive_reference_on_all_shapes():
+    shapes = [
+        flood_workflow("w"),
+        chain_workflow("w", 8),
+        branch_workflow("w", 4),
+        diamond_workflow("w", 3),
+        fanout_workflow("w", 5),
+        conditional_workflow("w"),
+        # irregular hand-built DAG: interleaved declaration order
+        Workflow("w", [_fn(n) for n in "dcbae"],
+                 [("a", "b"), ("a", "c"), ("c", "d"), ("b", "d"),
+                  ("d", "e")]),
+    ]
+    for wf in shapes:
+        assert wf.order() == naive_order(wf), wf.workflow_id
+
+
+def test_order_still_raises_on_cycle():
+    wf = Workflow("cyc", [_fn("a"), _fn("b")], [])
+    wf.edges += [("a", "b"), ("b", "a")]
+    with pytest.raises(ValueError, match="cycle"):
+        wf.order()
+
+
+# ---------------------------------------------------------------------------
+# satellite 2 — duplicate function names now rejected
+# ---------------------------------------------------------------------------
+def test_duplicate_function_names_raise():
+    # pre-PR this was silently tolerated (fn() took the first match)
+    with pytest.raises(ValueError, match="duplicate"):
+        Workflow("dup", [_fn("a"), _fn("a")], [])
+
+
+# ---------------------------------------------------------------------------
+# model validation: conditions / sync / chunk / rank
+# ---------------------------------------------------------------------------
+def test_condition_on_unknown_edge_rejected():
+    with pytest.raises(ValueError, match="condition"):
+        Workflow("w", [_fn("a"), _fn("b")], [("a", "b")],
+                 conditions={("b", "a"): lambda p: True})
+
+
+def test_unknown_sync_name_rejected():
+    with pytest.raises(ValueError, match="sync"):
+        Workflow("w", [_fn("a")], [], sync=("ghost",))
+
+
+def test_unknown_chunk_name_rejected():
+    with pytest.raises(ValueError, match="chunk"):
+        Workflow("w", [_fn("a")], [], chunk={"ghost": 0.5})
+
+
+def test_build_dag_rejects_inconsistent_rank():
+    with pytest.raises(ValueError, match="inconsistent rank"):
+        build_dag("w", [_fn("a"), _fn("b"), _fn("c")],
+                  [DagEdge("a", "c", rank=2), DagEdge("b", "c", rank=3)])
+
+
+def test_build_dag_rejects_ranked_sync():
+    with pytest.raises(ValueError, match="sync"):
+        build_dag("w", [_fn("a"), _fn("s")],
+                  [DagEdge("a", "s", rank=2)], sync=("s",))
+
+
+def test_rank_expansion_names_chunks_and_fan_in():
+    wf = fanout_workflow("w", 3)
+    names = [f.name for f in wf.functions]
+    assert names == ["split", "work#1", "work#2", "work#3", "join"]
+    assert wf.chunk == {f"work#{k}": pytest.approx(1 / 3)
+                       for k in (1, 2, 3)}
+    # the consumer became a 3-way fan-in
+    assert wf.predecessors("join") == ["work#1", "work#2", "work#3"]
+    # sibling demands were cloned, not aliased
+    assert wf.fn("work#1").demand.name == "work#1"
+    assert wf.fn("work#1").demand is not wf.fn("work#2").demand
+
+
+def test_is_linear_gates_the_chain_path():
+    assert flood_workflow("w").is_linear
+    assert chain_workflow("w", 6).is_linear
+    assert not branch_workflow("w").is_linear
+    assert not diamond_workflow("w").is_linear
+    assert not conditional_workflow("w").is_linear
+    assert not fanout_workflow("w").is_linear
+
+
+# ---------------------------------------------------------------------------
+# DagSchedule: liveness / skip-cascade bookkeeping (engine-agnostic)
+# ---------------------------------------------------------------------------
+def _schedule_for(wf):
+    placement = {f.name: "drone0" for f in wf.functions}
+    gg = plan_dag_groups(wf, placement, max_depth=0)
+    return DagSchedule(gg, wf), gg
+
+
+def test_non_sync_fan_in_is_strict_and():
+    # a -> c, b -(False)-> c: c is NOT a sync node, so one dead in-edge
+    # kills it
+    wf = build_dag("w", [_fn("a"), _fn("b"), _fn("c")],
+                   [DagEdge("a", "c"),
+                    DagEdge("b", "c", condition=lambda p: False)])
+    sched, gg = _schedule_for(wf)
+    live = {("a", "c"): True, ("b", "c"): False}
+    eval_edge = lambda u, v: live[(u, v)]
+    spawn = []
+    for g in list(gg.entry_groups()):
+        s, _ = sched.resolve(g.group_id, 1.0, eval_edge)
+        spawn += s
+    assert spawn == [] and sched.skipped == [gg.owner["c"]]
+    assert sched.remaining == 0
+
+
+def test_sync_runs_when_any_predecessor_is_live():
+    wf = conditional_workflow(_wid_with_parity(even=True))
+    sched, gg = _schedule_for(wf)
+    # split done: hi live (even wid), lo skipped; the skip must cascade
+    # through lo and still resolve join's barrier as runnable
+    spawn, skips = sched.resolve(
+        gg.owner["split"], 1.0,
+        lambda u, v: wf.conditions[(u, v)](
+            {"workflow_id": wf.workflow_id}) if (u, v) in wf.conditions
+        else True)
+    assert [g.function_ids[0] for g, _ in spawn] == ["hi"]
+    assert skips == [gg.owner["lo"]]
+    spawn, skips = sched.resolve(gg.owner["hi"], 2.0, lambda u, v: True)
+    assert [g.function_ids[0] for g, _ in spawn] == ["join"]
+    assert skips == [] and sched.remaining == 1
+
+
+def test_sync_skipped_when_every_predecessor_is_dead():
+    wf = build_dag("w", [_fn("a"), _fn("b"), _fn("s")],
+                   [DagEdge("a", "b", condition=lambda p: False),
+                    DagEdge("b", "s")], sync=("s",))
+    sched, gg = _schedule_for(wf)
+    spawn, skips = sched.resolve(gg.owner["a"], 1.0, lambda u, v: False)
+    assert spawn == []
+    assert skips == [gg.owner["b"], gg.owner["s"]]
+    assert sched.remaining == 0     # nothing left: barrier released
+
+
+# ---------------------------------------------------------------------------
+# engine integration: concurrency, barriers, skips, end-to-end
+# ---------------------------------------------------------------------------
+def test_branches_run_concurrently(net):
+    # width-4 branch vs the same 5 cells as a chain: concurrent branches
+    # must finish well under the sequential sum
+    eng = WorkflowEngine(net, strategy="databelt")
+    mb = eng.run_instance(branch_workflow("b0", 4), 8e6)
+    eng2 = WorkflowEngine(net, strategy="databelt")
+    mc = eng2.run_instance(chain_workflow("c0", 4), 8e6)
+    assert mb.latency < 0.8 * mc.latency
+    assert mb.reads > 0 and mb.storage_ops > 0
+
+
+def test_diamond_emits_barrier_wait_and_branch_lanes(net):
+    eng = WorkflowEngine(net, strategy="databelt")
+    rec = SpanRecorder()
+    m = eng.run_instance(diamond_workflow("d0", 3), 6e6, trace=rec)
+    assert m.latency > 0
+    tr = rec.report()
+    waits = [s for s in tr.spans if s.name == "barrier_wait"]
+    assert len(waits) == 1
+    assert waits[0].duration > 0          # someone really waited
+    # per-branch phase lanes: group spans ride sub-lanes of the instance
+    lanes = {s.track for s in tr.spans if s.category == "phase"}
+    assert any("/" in lane for lane in lanes)
+    # every phase span (branch or chain) parents to the instance root
+    roots = [s for s in tr.spans if s.category == "instance"]
+    assert len(roots) == 1
+    assert all(s.parent_id == roots[0].span_id
+               for s in tr.spans if s.category == "phase")
+
+
+@pytest.mark.parametrize("even", [True, False])
+def test_conditional_skip_releases_barrier_both_parities(net, even):
+    wid = _wid_with_parity(even)
+    eng = WorkflowEngine(net, strategy="databelt")
+    rec = SpanRecorder()
+    m = eng.run_instance(conditional_workflow(wid), 4e6, trace=rec)
+    assert m.latency > 0                  # completed: no deadlock
+    tr = rec.report()
+    skips = [i for i in tr.instants if i.name == "branch_skip"]
+    assert len(skips) == 1                # exactly one arm skipped
+    ran = {s.name for s in tr.spans if s.category == "phase"}
+    assert "execute" in ran
+    # skipped branch executed nothing: 4 functions, one skipped ->
+    # exactly 3 executes in the span stream
+    assert len([s for s in tr.spans if s.name == "execute"]) == 3
+
+
+def test_ranked_fanout_stresses_storage_concurrently(net):
+    eng = WorkflowEngine(net, strategy="databelt", fusion_depth=4)
+    m = eng.run_instance(fanout_workflow("f0", 4), 8e6)
+    assert m.latency > 0
+    # split writes 1, siblings write 4, join writes 1; every sibling
+    # chunk read + the fused join read
+    assert m.reads >= 5
+
+
+def test_fused_fan_in_reads_sum_of_parts(net):
+    # the fusion contract at a fan-in: ONE get_fused over all branch
+    # states returns exactly the bytes the branches wrote
+    eng = WorkflowEngine(net, strategy="databelt")
+    sizes = {"b1": 3e5, "b2": 5e5, "b3": 7e5}
+    keys = []
+    for fname, size in sizes.items():
+        k = StateKey("wf-fuse", "drone0", fname)
+        eng.storage.put(k, size, writer_node="drone0")
+        keys.append(k)
+    sts, r = eng.storage.get_fused(keys, "drone0")
+    assert sum(s.size for s in sts) == pytest.approx(sum(sizes.values()))
+    assert r.tier == "fused"
+
+
+def test_fused_fan_in_saves_storage_ops_vs_unfused():
+    base = Scenario(workload=WorkloadSpec(kind="stagger", stagger=0.05),
+                    strategy="databelt", n=8, input_bytes=2e6,
+                    workflow="fanout:3")
+    fused = base.replace(fusion_depth=4).run()
+    unfused = base.replace(fusion_depth=1).run()
+    ops = lambda rep: sum(m.storage_ops for m in rep.instances)
+    assert ops(fused) < ops(unfused)
+
+
+def test_chunked_siblings_compute_less_than_unchunked(net):
+    # chunk scales compute input: a width-4 ranked sibling sees 1/4 of
+    # the predecessor's output
+    wf = fanout_workflow("f1", 4)
+    assert wf.chunk["work#2"] == pytest.approx(0.25)
+    eng = WorkflowEngine(net, strategy="databelt")
+    m4 = eng.run_instance(wf, 8e6)
+    eng2 = WorkflowEngine(net, strategy="databelt")
+    m1 = eng2.run_instance(
+        build_dag("f2", [_fn("split"), _fn("work"), _fn("join")],
+                  [("split", "work"), ("work", "join")]), 8e6)
+    # 4 chunked workers cost no more compute than one full-size worker
+    assert m4.compute_time <= m1.compute_time + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# determinism: DAG replay under churn, scenario round-trip
+# ---------------------------------------------------------------------------
+def test_dag_replay_bit_identical_under_churn():
+    sc = Scenario(workload=WorkloadSpec(kind="poisson", rate=2.0),
+                  strategy="databelt", n=8, input_bytes=2e6,
+                  workflow="conditional", fusion_depth=4,
+                  faults=FaultPlan.poisson(rate=0.05, outage_s=4.0,
+                                           targets=("cloud0",),
+                                           horizon_s=10.0, seed=7),
+                  record_trace=True)
+    a, b = sc.run(), sc.run()
+    assert a.trace == b.trace and len(a.trace) > 0
+
+
+def test_dag_traced_replay_is_bit_identical():
+    sc = Scenario(workload=WorkloadSpec(kind="stagger", stagger=0.1),
+                  strategy="databelt", n=6, input_bytes=2e6,
+                  workflow="diamond:3", fusion_depth=4)
+    a = sc.run(trace=True).trace_report
+    b = sc.run(trace=True).trace_report
+    assert a.to_events() == b.to_events() and len(a.to_events()) > 0
+
+
+def test_scenario_workflow_axis_round_trips_every_shape():
+    for shape in ("branch:3", "diamond:2", "fanout:4", "conditional"):
+        rep = Scenario(workload=WorkloadSpec(kind="stagger",
+                                             stagger=0.05),
+                       strategy="databelt", n=4, input_bytes=1e6,
+                       workflow=shape).run()
+        assert len(rep.instances) == 4
+        assert all(m.latency > 0 for m in rep.instances)
+
+
+def test_unknown_workflow_shape_message_lists_dag_shapes():
+    with pytest.raises(ValueError, match="fanout"):
+        Scenario(workflow="moebius").run()
