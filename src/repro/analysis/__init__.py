@@ -11,7 +11,11 @@ suppression pragma and a module allowlist.  Runnable and CI-gated::
 
 Runtime half: ``repro.analysis.replay`` — trace diffing +
 ``Scenario.verify_replay()``, which runs a spec twice and reports the
-*first divergent event* instead of a bare goldens mismatch.
+*first divergent event* instead of a bare goldens mismatch — and
+``repro.analysis.races`` — the databelt-race gate: static race-shape
+checks DB010–DB013 plus ``Scenario.verify_races()`` /
+``--race-smoke``, driving the happens-before sanitizer
+(``SimKernel(race_detect=True)``) over a full scenario.
 """
 from repro.analysis.config import (AnalysisConfig, CHECK_CATALOG,
                                    default_config)
@@ -22,10 +26,13 @@ from repro.analysis.framework import (CHECKERS, Checker, Finding,
 from repro.analysis import cache as _cache              # noqa: F401
 from repro.analysis import determinism as _determinism  # noqa: F401
 from repro.analysis import protocol as _protocol        # noqa: F401
+from repro.analysis import races as _races              # noqa: F401
 from repro.analysis.replay import ReplayCheck, diff_traces, verify_scenario
+from repro.analysis.races import RaceCheck, verify_scenario_races
 
 __all__ = [
     "AnalysisConfig", "CHECK_CATALOG", "CHECKERS", "Checker", "Finding",
-    "ModuleUnit", "ReplayCheck", "analyze_source", "default_config",
-    "diff_traces", "register_checker", "run_analysis", "verify_scenario",
+    "ModuleUnit", "RaceCheck", "ReplayCheck", "analyze_source",
+    "default_config", "diff_traces", "register_checker", "run_analysis",
+    "verify_scenario", "verify_scenario_races",
 ]

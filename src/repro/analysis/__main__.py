@@ -5,10 +5,13 @@ Usage:
     PYTHONPATH=src python -m repro.analysis src/ --strict   # CI gate
     PYTHONPATH=src python -m repro.analysis --list-checks
     PYTHONPATH=src python -m repro.analysis --replay-smoke  # sanitizer
+    PYTHONPATH=src python -m repro.analysis --race-smoke    # HB races
+    PYTHONPATH=src python -m repro.analysis src/ --format sarif > out.sarif
 
 Exit codes: 0 clean (suppressed/allowlisted findings do not fail),
 1 unsuppressed findings (or, with --strict, undocumented suppressions;
-or a diverging replay with --replay-smoke).
+or a diverging replay with --replay-smoke; or an unordered conflicting
+access with --race-smoke).
 """
 from __future__ import annotations
 
@@ -17,7 +20,8 @@ import sys
 
 from repro.analysis.config import AnalysisConfig, default_config
 from repro.analysis.framework import run_analysis
-from repro.analysis.report import exit_code, render, render_catalog
+from repro.analysis.report import (exit_code, render, render_catalog,
+                                   render_sarif)
 
 
 def replay_smoke() -> int:
@@ -41,6 +45,31 @@ def replay_smoke() -> int:
     return 0 if check.ok else 1
 
 
+def race_smoke() -> int:
+    """Fig20-style DAG spec run under the happens-before race sanitizer:
+    diamond workflows fanning out across a 2-region continuum while the
+    autoscaler resizes pools and Poisson drains knock clouds out — the
+    densest same-timestamp interleaving the benchmarks exercise.  Clean
+    means every conflicting access pair was ordered by spawn/wake,
+    acquire→release, or the clock itself; a race is localized to its
+    first conflicting event index and both process labels."""
+    from repro.scenario import (AutoscalePolicy, FaultPlan, NetworkSpec,
+                                Scenario, WorkloadSpec)
+    sc = Scenario(
+        network=NetworkSpec(regions=2),
+        workload=WorkloadSpec(kind="regional_diurnal", rate=8.0,
+                              peak_to_trough=2.0, seed=11),
+        strategy="databelt", n=24, input_bytes=2e6,
+        workflow="diamond:3",
+        autoscale=AutoscalePolicy(interval_s=0.5, p95_slo_s=2.0),
+        faults=FaultPlan.poisson(rate=0.1, outage_s=6.0,
+                                 targets=("cloud0", "cloud1"),
+                                 horizon_s=14.0, seed=7))
+    check = sc.verify_races()
+    print(check.describe())
+    return 0 if check.ok else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -60,6 +89,12 @@ def main(argv=None) -> int:
     ap.add_argument("--replay-smoke", action="store_true",
                     help="run the runtime replay sanitizer on a churn "
                          "spec instead of linting")
+    ap.add_argument("--race-smoke", action="store_true",
+                    help="run the happens-before race sanitizer on a "
+                         "DAG+churn+autoscale spec instead of linting")
+    ap.add_argument("--format", choices=("text", "sarif"), default="text",
+                    help="finding output format (sarif emits a SARIF "
+                         "2.1.0 document for CI upload)")
     args = ap.parse_args(argv)
 
     if args.list_checks:
@@ -67,13 +102,18 @@ def main(argv=None) -> int:
         return 0
     if args.replay_smoke:
         return replay_smoke()
+    if args.race_smoke:
+        return race_smoke()
 
     config = AnalysisConfig.from_json(args.config) if args.config \
         else default_config()
     paths = args.paths or ["src"]
     findings = run_analysis(paths, config=config,
                             require_reasons=args.strict)
-    print(render(findings, show_suppressed=args.show_suppressed))
+    if args.format == "sarif":
+        print(render_sarif(findings))
+    else:
+        print(render(findings, show_suppressed=args.show_suppressed))
     return exit_code(findings)
 
 

@@ -176,16 +176,19 @@ def register_checker(cls: Type[Checker]) -> Type[Checker]:
 # running
 # ---------------------------------------------------------------------------
 def module_name_of(path: Path) -> Optional[str]:
-    """Dotted module name for files under a ``repro`` package; None for
-    anything else (fixture files get the full battery)."""
+    """Dotted module name for files under a ``repro`` package — or the
+    repo's ``benchmarks``/``tests`` trees, so scope globs and the
+    allowlist can tune the battery for harness code.  None for anything
+    else (fixture files get the full battery)."""
     parts = list(path.with_suffix("").parts)
-    if "repro" not in parts:
-        return None
-    i = len(parts) - 1 - parts[::-1].index("repro")
-    mod = parts[i:]
-    if mod[-1] == "__init__":
-        mod = mod[:-1]
-    return ".".join(mod)
+    for root in ("repro", "benchmarks", "tests"):
+        if root in parts:
+            i = len(parts) - 1 - parts[::-1].index(root)
+            mod = parts[i:]
+            if mod[-1] == "__init__":
+                mod = mod[:-1]
+            return ".".join(mod)
+    return None
 
 
 def iter_py_files(paths: Iterable[str]) -> List[Path]:

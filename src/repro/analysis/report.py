@@ -1,6 +1,7 @@
 """Finding presentation + exit-code policy for databelt-lint."""
 from __future__ import annotations
 
+import json
 from collections import Counter
 from typing import List
 
@@ -36,6 +37,52 @@ def render(findings: List[Finding], show_suppressed: bool = False) -> str:
 def render_catalog() -> str:
     return "\n".join(f"{code}  {desc}"
                      for code, desc in sorted(CHECK_CATALOG.items()))
+
+
+def render_sarif(findings: List[Finding]) -> str:
+    """SARIF 2.1.0 document for the *active* findings — the format CI
+    uploads so findings annotate PRs inline.  Suppressed/allowlisted
+    findings are carried with ``suppressions`` entries (SARIF's own
+    mechanism), so viewers can show them muted instead of losing them."""
+    rules = [{
+        "id": code,
+        "shortDescription": {"text": desc},
+    } for code, desc in sorted(CHECK_CATALOG.items())]
+    results = []
+    for f in findings:
+        result = {
+            "ruleId": f.code,
+            "level": "error",
+            "message": {"text": f.message + (f"\nfix: {f.hint}"
+                                             if f.hint else "")},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {"uri": f.path},
+                    "region": {"startLine": max(f.line, 1),
+                               "startColumn": f.col + 1},
+                },
+            }],
+        }
+        if f.suppressed or f.allowlisted:
+            result["suppressions"] = [{
+                "kind": "inSource" if f.suppressed else "external",
+            }]
+        results.append(result)
+    doc = {
+        "$schema": "https://raw.githubusercontent.com/oasis-tcs/"
+                   "sarif-spec/master/Schemata/sarif-schema-2.1.0.json",
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "databelt-lint",
+                "informationUri":
+                    "https://github.com/databelt/databelt-repro",
+                "rules": rules,
+            }},
+            "results": results,
+        }],
+    }
+    return json.dumps(doc, indent=2, sort_keys=True)
 
 
 def exit_code(findings: List[Finding]) -> int:

@@ -79,6 +79,10 @@ class ContinuumNetwork:
         # are filtered out of every snapshot until restored
         self._down_nodes: Set[str] = set()
         self._down_links: Set[Tuple[str, str]] = set()
+        # race sanitizer (repro.sim.races): a race-detected run attaches
+        # its kernel here so topology mutations/reads are HB-checked —
+        # None keeps every hook at a single attribute test
+        self._race_kernel = None
         # persistent node objects so resource accounting survives snapshots
         self._nodes: Dict[str, Node] = {}
         self._make_nodes()
@@ -130,6 +134,8 @@ class ContinuumNetwork:
         else:
             self._down_nodes.discard(nid)
         if before != down:
+            if self._race_kernel is not None:
+                self._race_kernel.note_access(self, "topology", "w")
             self._invalidate()
 
     def set_link_down(self, a: str, b: str, down: bool = True) -> None:
@@ -142,6 +148,8 @@ class ContinuumNetwork:
         else:
             self._down_links.discard(pair)
         if before != down:
+            if self._race_kernel is not None:
+                self._race_kernel.note_access(self, "topology", "w")
             self._invalidate()
 
     def _invalidate(self) -> None:
@@ -156,6 +164,8 @@ class ContinuumNetwork:
 
     # ------------------------------------------------------------------
     def graph_at(self, t: float) -> TopologyGraph:
+        if self._race_kernel is not None:
+            self._race_kernel.note_access(self, "topology", "r")
         if t == self._last_t:
             return self._last_g
         key = round(t / self.cache_quantum) * self.cache_quantum

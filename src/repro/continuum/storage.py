@@ -223,6 +223,19 @@ class TwoTierStorage:
     def _clouds(graph: TopologyGraph) -> List[str]:
         return graph.ids_of_kind(CLOUD)
 
+    # -- race-sanitizer hook ---------------------------------------------
+    @staticmethod
+    def _race_note(clock):
+        """``kernel.note_access`` bound to the op's kernel when the race
+        sanitizer is attached, else None — one check per *op*, zero cost
+        per access when detection is off.  Accesses are noted per
+        ``node/encoded-key`` cell, so two branches touching different
+        state keys never conflict."""
+        k = clock.kernel
+        if k is not None and k.races is not None:
+            return k.note_access
+        return None
+
     # -- global-tier replication (k=2 fan-out) --------------------------
     def _replicate_targets(self, graph: TopologyGraph, src: str,
                            enc: str) -> List[str]:
@@ -304,11 +317,18 @@ class TwoTierStorage:
             st = StoredState(key.moved(src), size, payload)
             lat, hops = 0.0, 0
         bucket = self.local.setdefault(dst, {})
+        note = self._race_note(clock)
+        if note is not None:
+            note(self.local, f"{dst}/{key.encoded()}", "w")
+            if st.key.encoded() != key.encoded():
+                note(self.local, f"{dst}/{st.key.encoded()}", "w")
         bucket[st.key.encoded()] = st
         bucket[key.encoded()] = st
         if not account:
             if replicate_global:
                 self._replicate_record(graph, src, key, st)
+                if note is not None:
+                    note(self.global_tier, key.encoded(), "w")
             return AccessResult(0.0, hops, src == dst, tier="register",
                                 node=dst)
         # leg order is the same in BOTH modes (the redesign's contract:
@@ -325,8 +345,10 @@ class TwoTierStorage:
             # redundancy writes: the nearest region's shard (paper: write
             # times are nearly system-independent because every system
             # pays this cloud-bound leg) plus the key's home shard
-            for i, cloud in enumerate(self._replicate_record(graph, src,
-                                                             key, st)):
+            targets = self._replicate_record(graph, src, key, st)
+            if note is not None:
+                note(self.global_tier, key.encoded(), "w")
+            for i, cloud in enumerate(targets):
                 if cloud == dst:
                     continue
                 glat, _ = self._transfer(graph, src, cloud, size)
@@ -352,7 +374,10 @@ class TwoTierStorage:
     def _op_get(self, key: StateKey, reader_node: str, clock):
         graph = self.graph_fn(clock.now)
         enc = key.encoded()
+        note = self._race_note(clock)
         # local tier on the reader itself
+        if note is not None:
+            note(self.local, f"{reader_node}/{enc}", "r")
         st = self.local.get(reader_node, {}).get(enc)
         if st is not None:
             yield from clock.kvs_leg(reader_node,
@@ -363,6 +388,8 @@ class TwoTierStorage:
                                     service_s=clock.service)
         # local tier on the address node
         holder = key.storage_address
+        if note is not None:
+            note(self.local, f"{holder}/{enc}", "r")
         st = self.local.get(holder, {}).get(enc)
         if st is not None and holder in graph.nodes:
             lat, hops = self._transfer(graph, holder, reader_node, st.size)
@@ -378,8 +405,12 @@ class TwoTierStorage:
         # global tier fallback (holder missing or unreachable): home
         # shard first, then cross-region — healing the home shard when
         # the fallback served the read
+        if note is not None:
+            note(self.global_tier, enc, "r")
         st, serving, home_hit = self._global_locate(graph, enc,
                                                     reader_node, heal=True)
+        if note is not None and st is not None and not home_hit:
+            note(self.global_tier, enc, "w")   # read-repair healed home
         if st is not None:
             src_node = serving or holder
             lat, hops = self._transfer(graph, src_node, reader_node,
@@ -405,11 +436,13 @@ class TwoTierStorage:
         """Grouped retrieval for a fusion group: ONE request per source
         node (paper §4.2) instead of one per function."""
         graph = self.graph_fn(clock.now)
+        note = self._race_note(clock)
         by_source: Dict[str, float] = {}
         states = []
         n_global = 0
         for key in keys:
-            loc = self._locate(key, reader_node, graph, heal=True)
+            loc = self._locate(key, reader_node, graph, heal=True,
+                               note=note)
             if loc is None:
                 return None, AccessResult(math.inf, 10**9, False,
                                           tier="missing",
@@ -477,19 +510,29 @@ class TwoTierStorage:
 
     # ------------------------------------------------------------------
     def _locate(self, key: StateKey, reader: str, graph,
-                heal: bool = False):
+                heal: bool = False, note=None):
         """Resolve ``key`` for ``reader``: reader-local → holder node →
         global tier.  Returns ``(state, serving_node, tier)`` — tier one
         of ``"local"``/``"holder"``/``"global-home"``/
-        ``"global-fallback"`` — or None."""
+        ``"global-fallback"`` — or None.  ``note`` is the race
+        sanitizer's access hook (each tier probe is a read; a heal that
+        re-populates the home shard is a write)."""
         enc = key.encoded()
+        if note is not None:
+            note(self.local, f"{reader}/{enc}", "r")
         if enc in self.local.get(reader, {}):
             return (self.local[reader][enc], reader, "local")
         holder = key.storage_address
+        if note is not None:
+            note(self.local, f"{holder}/{enc}", "r")
         if enc in self.local.get(holder, {}) and holder in graph.nodes:
             return (self.local[holder][enc], holder, "holder")
+        if note is not None:
+            note(self.global_tier, enc, "r")
         st, serving, home_hit = self._global_locate(graph, enc, reader,
                                                     heal=heal)
+        if note is not None and st is not None and heal and not home_hit:
+            note(self.global_tier, enc, "w")   # read-repair healed home
         if st is not None:
             return (st, serving or holder,
                     "global-home" if home_hit else "global-fallback")

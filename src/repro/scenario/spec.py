@@ -234,6 +234,10 @@ class Scenario:
     # Defaults preserve bit-identical reports for every pinned figure.
     collect: str = "full"
     lazy_arrivals: bool = False
+    # attach the happens-before race sanitizer (repro.sim.races) to the
+    # run: passive detection — reports land in ``rep.races``; metrics
+    # and traces stay bit-identical to a detection-off run
+    race_detect: bool = False
 
     # -- validation ------------------------------------------------------
     def validate(self) -> None:
@@ -262,6 +266,11 @@ class Scenario:
                 "collect='aggregate'/lazy_arrivals are run_parallel scale "
                 "knobs — sequential workloads never hold a fleet in "
                 "memory, so they have nothing to save")
+        if self.workload.kind == "sequential" and self.race_detect:
+            raise ValueError(
+                "race_detect needs concurrent processes on one kernel — "
+                "sequential workloads run one private kernel per "
+                "instance, so there is nothing to race")
 
     # -- construction (exactly the hand-wired path) ----------------------
     def build_network(self) -> ContinuumNetwork:
@@ -329,7 +338,7 @@ class Scenario:
                 entry=entry, record_trace=self.record_trace,
                 autoscale=self.autoscale, faults=self.faults,
                 collect=self.collect, lazy_arrivals=self.lazy_arrivals,
-                trace=recorder)
+                trace=recorder, race_detect=self.race_detect)
         return ScenarioReport(scenario=self, rep=rep)
 
     def verify_replay(self):
@@ -341,6 +350,17 @@ class Scenario:
         events of the nondeterministic read itself."""
         from repro.analysis.replay import verify_scenario
         return verify_scenario(self)
+
+    def verify_races(self):
+        """Runtime race sanitizer: run this spec once with
+        ``race_detect=True`` and return a
+        ``repro.analysis.races.RaceCheck``.  Each finding localizes a
+        pair of conflicting same-timestamp accesses that no
+        spawn/wake/acquire-release happens-before edge orders — the
+        interleavings whose outcome rests on the event heap's ``seq``
+        tie-break alone."""
+        from repro.analysis.races import verify_scenario_races
+        return verify_scenario_races(self)
 
     # -- serialization ---------------------------------------------------
     @property
@@ -378,6 +398,7 @@ class Scenario:
             "record_trace": self.record_trace,
             "collect": self.collect,
             "lazy_arrivals": self.lazy_arrivals,
+            "race_detect": self.race_detect,
         }
 
     @classmethod
@@ -407,6 +428,7 @@ class Scenario:
             record_trace=bool(d.get("record_trace", False)),
             collect=d.get("collect", "full"),
             lazy_arrivals=bool(d.get("lazy_arrivals", False)),
+            race_detect=bool(d.get("race_detect", False)),
         )
 
     # -- grid expansion --------------------------------------------------

@@ -642,7 +642,8 @@ class WorkflowEngine:
                      faults: Optional[FaultPlan] = None,
                      collect: str = "full",
                      lazy_arrivals: bool = False,
-                     trace=None
+                     trace=None,
+                     race_detect: bool = False
                      ) -> ParallelReport:
         """n truly concurrent workflow instances on one shared event loop.
 
@@ -698,6 +699,14 @@ class WorkflowEngine:
         never touches event order — a traced run's metrics are
         bit-identical to the untraced run (pinned in
         ``tests/test_trace.py``).
+
+        ``race_detect=True`` attaches the happens-before race sanitizer
+        (``repro.sim.races``): shared-state accesses — storage buckets,
+        the global tier, topology overrides, slot capacities, the
+        autoscaler's latency window — are checked for same-timestamp
+        conflicts no spawn/wake/acquire-release edge orders.  Detection
+        is passive (never schedules events), so metrics and traces stay
+        bit-identical; the findings land in ``report.races``.
         """
         if collect not in ("full", "aggregate"):
             raise ValueError(f"unknown collect mode {collect!r}; choose "
@@ -707,7 +716,10 @@ class WorkflowEngine:
                 "fault injection needs mode='event' — analytic "
                 "committed-schedule accounting cannot park requests on a "
                 "drained node")
-        kernel = SimKernel(start=t0, record_trace=record_trace)
+        kernel = SimKernel(start=t0, record_trace=record_trace,
+                           race_detect=race_detect)
+        if race_detect:
+            self.net._race_kernel = kernel
         recorder = None
         if trace:
             recorder = trace if isinstance(trace, SpanRecorder) \
@@ -783,6 +795,8 @@ class WorkflowEngine:
                 gc.collect()
             if recorder is not None:
                 self.storage.recorder = None
+            if race_detect:
+                self.net._race_kernel = None
         common = dict(
             pool=self.resources,
             events_processed=kernel.events_processed,
@@ -790,7 +804,9 @@ class WorkflowEngine:
             autoscale=scaler.report() if scaler is not None else None,
             faults=injector.report() if injector is not None else None,
             trace_report=recorder.report()
-            if recorder is not None else None)
+            if recorder is not None else None,
+            races=list(kernel.races.reports)
+            if kernel.races is not None else None)
         if agg is not None:
             return ParallelReport.build_aggregate(agg, **common)
         results.sort(key=lambda r: r[0])

@@ -147,6 +147,9 @@ class Autoscaler:
 
     def observe_latency(self, latency_s: float) -> None:
         """Feed one completed-instance latency into the rolling window."""
+        if self.kernel.races is not None:
+            # instance procs write the window the daemon's tick reads
+            self.kernel.note_access(self, "window", "w")
         self._latencies.append(latency_s)
 
     def rolling_p95(self) -> float:
@@ -162,6 +165,8 @@ class Autoscaler:
     def _tick(self) -> None:
         p = self.policy
         now = self.kernel.now
+        if self.kernel.races is not None:
+            self.kernel.note_access(self, "window", "r")
         p95_breach = (p.p95_slo_s is not None and len(self._latencies) > 0
                       and self.rolling_p95() > p.p95_slo_s)
         for kind in p.kinds:
@@ -182,6 +187,9 @@ class Autoscaler:
             # (and don't count the interval as calm either)
             self._calm[res.name] = 0
             return
+        if self.kernel.races is not None:
+            # the control read conflicting with any same-instant resize
+            self.kernel.note_access(res, "capacity", "r")
         waiting = res.queue_len(now)
         busy = res.in_service(now)
         cap = res.capacity
@@ -246,6 +254,8 @@ class Autoscaler:
                reason: str) -> None:
         old = res.capacity
         rec = self.kernel.recorder
+        if self.kernel.races is not None:
+            self.kernel.note_access(res, "capacity", "w")
         woken = res.set_capacity(new_cap, now)
         for proc, label, waited in woken:
             self.kernel.log(f"grant:{label}@{res.name}")

@@ -187,6 +187,8 @@ class FaultInjector:
         for kind, res in ((ResourcePool.CPU, self.pool.cpu(node)),
                           (ResourcePool.KVS, self.pool.kvs(node))):
             prior[kind] = res.capacity
+            if self.kernel.races is not None:
+                self.kernel.note_access(res, "capacity", "w")
             res.set_capacity(0, self.kernel.now)
         self._down[node] = prior
         self.net.set_node_down(node, True)
@@ -211,6 +213,8 @@ class FaultInjector:
             res = self.pool.peek(kind, node)
             if res is None:
                 continue
+            if self.kernel.races is not None:
+                self.kernel.note_access(res, "capacity", "w")
             for proc, label, waited in res.set_capacity(cap, now):
                 self.kernel.log(f"grant:{label}@{res.name}")
                 if rec is not None and waited > 0.0:

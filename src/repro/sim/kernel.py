@@ -29,6 +29,10 @@ Determinism rules (guarded, not assumed):
 * With ``record_trace=True`` every event append is logged as
   ``(time, seq, label)``; two runs of the same seeded workload must produce
   identical traces (see ``tests/test_sim_kernel.py``).
+* With ``race_detect=True`` a happens-before race sanitizer
+  (``repro.sim.races``) watches every ``note_access`` hook and reports
+  conflicting same-timestamp accesses no spawn/wake/acquire-release edge
+  orders — interleavings whose order rests on the ``seq`` tie-break alone.
 """
 from __future__ import annotations
 
@@ -38,12 +42,20 @@ from typing import Callable, Generator, List, Optional, Tuple, Union
 
 Trace = List[Tuple[float, int, str]]
 
+#: The effect ops a process may yield — the runtime protocol
+#: ``_step_proc`` dispatches on.  databelt-lint's DB005 check pins its
+#: ``AnalysisConfig.known_ops`` inventory to this tuple (equality test in
+#: ``tests/test_races.py``; the lint stays importable without the sim's
+#: numpy dependencies, so it cannot import this symbol directly).
+KNOWN_EFFECT_OPS: Tuple[str, ...] = ("acquire", "release")
+
 
 class SimKernel:
     """Event-heap scheduler driving generator processes in simulated time."""
 
     def __init__(self, start: float = 0.0,
-                 record_trace: Union[bool, str] = False):
+                 record_trace: Union[bool, str] = False,
+                 race_detect: bool = False):
         self.now = float(start)
         self._heap: list = []          # (time, seq, kind, payload, label,
                                        #  daemon)
@@ -63,6 +75,23 @@ class SimKernel:
         # attached by a traced run; every hook below is a single
         # ``is not None`` check so the disabled path allocates nothing
         self.recorder = None
+        # optional happens-before race sanitizer (repro.sim.races):
+        # passive — it never schedules events, so a race-detected run is
+        # event-for-event identical to the same run with it off.  Same
+        # single ``is not None`` hook discipline as the recorder.
+        self.races = None
+        if race_detect:
+            from repro.sim.races import RaceDetector
+            self.races = RaceDetector(self)
+
+    def note_access(self, obj, field: str, mode: str) -> None:
+        """Race-sanitizer hook: record a read (``mode="r"``) or write
+        (``"w"``) of ``field`` on shared ``obj`` by the currently
+        running process.  No-op unless ``race_detect=True``; call sites
+        guard on ``kernel.races is not None`` to keep the disabled path
+        at one attribute check."""
+        if self.races is not None:
+            self.races.note(obj, field, mode)
 
     def _note(self, t: float, seq: int, label: str) -> None:
         if self.trace is not None:
@@ -93,6 +122,10 @@ class SimKernel:
                                     daemon))
         if not daemon:
             self._live += 1
+        if self.races is not None:
+            # spawn/wake/call HB edge: the new event inherits the
+            # scheduling context's history
+            self.races.on_push(self._seq)
         if self._tracing:
             self._note(t, self._seq, f"schedule:{label}")
 
@@ -130,6 +163,8 @@ class SimKernel:
         try:
             item = next(proc)
         except StopIteration:
+            if self.races is not None:
+                self.races.on_proc_exit(proc)
             return
         if isinstance(item, tuple):
             op, res = item
@@ -148,6 +183,10 @@ class SimKernel:
                         rec.instant("grant", "kernel", res.name,
                                     proc=label)
                     self._push(self.now, "proc", proc, label, daemon=daemon)
+                    if self.races is not None:
+                        # acquire→release edge: the grant inherits every
+                        # prior releaser's history on this resource
+                        self.races.join_resource(self._seq, res)
                 else:
                     res.enqueue_waiter(proc, label, self.now)
                     if self._tracing:
@@ -161,6 +200,9 @@ class SimKernel:
                     self.log(f"free:{label}@{res.name}")
                 if rec is not None:
                     rec.instant("free", "kernel", res.name, proc=label)
+                if self.races is not None:
+                    # publish the releaser's history to the next grantee
+                    self.races.on_release(res)
                 woken = res.unhold(self.now)
                 if woken is not None:
                     wproc, wlabel, waited = woken
@@ -174,10 +216,13 @@ class SimKernel:
                         rec.instant("grant", "kernel", res.name,
                                     proc=wlabel)
                     self._push(self.now, "proc", wproc, wlabel)
+                    if self.races is not None:
+                        self.races.join_resource(self._seq, res)
                 self._push(self.now, "proc", proc, label, daemon=daemon)
                 return
             raise ValueError(f"process {label!r} yielded unknown op "
-                             f"{op!r}")
+                             f"{op!r} — the kernel only understands "
+                             f"{KNOWN_EFFECT_OPS}")
         delay = 0.0 if item is None else float(item)
         if delay < 0.0:
             raise ValueError(f"process {label!r} yielded negative delay "
@@ -201,6 +246,7 @@ class SimKernel:
         heap = self._heap
         pop = heapq.heappop
         rec = self.recorder
+        races = self.races
         while heap and self._live > 0:
             if until is not None and heap[0][0] > until:
                 break
@@ -212,6 +258,8 @@ class SimKernel:
             elif t < self.now - 1e-12:
                 raise AssertionError("event heap went backwards")
             self.events_processed += 1
+            if races is not None:
+                races.on_fire(seq, kind, payload, label)
             if self._tracing:
                 self._note(self.now, seq, f"fire:{label}")
             if daemon and rec is not None:

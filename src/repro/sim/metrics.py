@@ -244,6 +244,17 @@ class ParallelReport:
     # repro.sim.trace.TraceReport when the run had the flight recorder
     # attached (trace=...), else None
     trace_report: Optional[object] = None
+    # list of repro.sim.races.RaceReport when the run had the race
+    # sanitizer attached (race_detect=True): empty = race-clean; None =
+    # detection was off
+    races: Optional[list] = None
+
+    @property
+    def race_clean(self) -> bool:
+        """True when the race sanitizer ran and found nothing.  False
+        both when races were found and when detection was off (an
+        unverified run must not pass a race gate)."""
+        return self.races is not None and not self.races
 
     @property
     def n_instances(self) -> int:
@@ -282,7 +293,7 @@ class ParallelReport:
     def build(cls, instances, start_times, end_times, pool=None,
               events_processed: int = 0, trace=None,
               autoscale=None, faults=None,
-              trace_report=None) -> "ParallelReport":
+              trace_report=None, races=None) -> "ParallelReport":
         lats = [m.latency for m in instances]
         t0 = min(start_times) if start_times else 0.0
         t1 = max(end_times) if end_times else 0.0
@@ -309,13 +320,14 @@ class ParallelReport:
             autoscale=autoscale,
             faults=faults,
             trace_report=trace_report,
+            races=races,
         )
 
     @classmethod
     def build_aggregate(cls, agg: FleetAggregate, pool=None,
                         events_processed: int = 0, trace=None,
                         autoscale=None, faults=None,
-                        trace_report=None) -> "ParallelReport":
+                        trace_report=None, races=None) -> "ParallelReport":
         """Fleet report from a running ``FleetAggregate`` — no
         per-instance lists, constant memory in the fleet size."""
         makespan = agg.makespan
@@ -334,6 +346,7 @@ class ParallelReport:
             faults=faults,
             aggregate=agg,
             trace_report=trace_report,
+            races=races,
         )
 
     # list-compat -------------------------------------------------------

@@ -226,7 +226,7 @@ def test_diamond_emits_barrier_wait_and_branch_lanes(net):
     assert len(waits) == 1
     assert waits[0].duration > 0          # someone really waited
     # per-branch phase lanes: group spans ride sub-lanes of the instance
-    lanes = {s.track for s in tr.spans if s.category == "phase"}
+    lanes = sorted({s.track for s in tr.spans if s.category == "phase"})
     assert any("/" in lane for lane in lanes)
     # every phase span (branch or chain) parents to the instance root
     roots = [s for s in tr.spans if s.category == "instance"]

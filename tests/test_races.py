@@ -1,0 +1,445 @@
+"""databelt-race — static DB010–DB013 fixtures, the runtime
+happens-before sanitizer, and the scenario-level race gate.
+
+Static half: every check gets a flagging snippet and a clean twin
+(acquire/release-ordered, version-bumped, copied, or non-daemon),
+analyzed through ``analyze_source`` with ``module=None`` so the full
+battery applies.  Runtime half: a hand-planted yield-spanning lost
+update must be caught and localized to its first conflicting event
+(index + both labels), its locked twin must be clean, detection must be
+passive (bit-identical traces/metrics), and the fig20-style
+DAG+autoscaler+faults scenario must run race-clean — the tier-1 pin
+behind CI's ``--race-smoke`` merge gate.
+"""
+import textwrap
+
+import pytest
+
+from repro.analysis import analyze_source, default_config
+from repro.analysis.races import RaceCheck
+from repro.scenario import (AutoscalePolicy, FaultPlan, NetworkSpec,
+                            Scenario, WorkloadSpec)
+from repro.sim.kernel import KNOWN_EFFECT_OPS, SimKernel
+from repro.sim.races import RaceAccess, RaceReport
+from repro.sim.resources import SlotResource
+
+
+def active_for(src, code):
+    out = analyze_source(textwrap.dedent(src), module=None,
+                         config=default_config())
+    return [f for f in out if f.code == code
+            and not f.suppressed and not f.allowlisted]
+
+
+# ---------------------------------------------------------------------------
+# DB010 — unmediated shared-attribute conflict across spawned processes
+# ---------------------------------------------------------------------------
+def test_db010_flags_unmediated_shared_write():
+    fs = active_for("""
+        def writer(state):
+            while True:
+                state.count = 1
+                yield 1.0
+
+        def reader(state):
+            while True:
+                v = state.count
+                yield 1.0
+
+        def drive(kernel, state):
+            kernel.spawn(writer(state))
+            kernel.spawn(reader(state))
+    """, "DB010")
+    assert len(fs) == 1
+    assert fs[0].line == 4                      # flagged at the write
+    assert "writer" in fs[0].message and "reader" in fs[0].message
+    assert "acquire/release" in fs[0].message
+
+
+def test_db010_clean_when_lock_mediates():
+    # both generators acquire the same passed-in resource — the
+    # acquire→release edge orders the accesses, whatever the formals
+    # are named on each side
+    assert active_for("""
+        def writer(state, res):
+            while True:
+                yield ("acquire", res)
+                state.count = 1
+                yield ("release", res)
+                yield 1.0
+
+        def reader(state, guard):
+            while True:
+                yield ("acquire", guard)
+                v = state.count
+                yield ("release", guard)
+                yield 1.0
+
+        def drive(kernel, state, lock):
+            kernel.spawn(writer(state, lock))
+            kernel.spawn(reader(state, lock))
+    """, "DB010") == []
+
+
+def test_db010_clean_when_writer_bumps_version():
+    assert active_for("""
+        def writer(state):
+            while True:
+                state.count = 1
+                state._version += 1
+                yield 1.0
+
+        def reader(state):
+            while True:
+                v = state.count
+                yield 1.0
+
+        def drive(kernel, state):
+            kernel.spawn(writer(state))
+            kernel.spawn(reader(state))
+    """, "DB010") == []
+
+
+def test_db010_clean_on_disjoint_state():
+    # two spawn sites but different actuals: nothing is shared
+    assert active_for("""
+        def writer(state):
+            while True:
+                state.count = 1
+                yield 1.0
+
+        def drive(kernel, a, b):
+            kernel.spawn(writer(a))
+            kernel.spawn(writer(b))
+    """, "DB010") == []
+
+
+# ---------------------------------------------------------------------------
+# DB011 — read-modify-write spanning a yield (lost update)
+# ---------------------------------------------------------------------------
+def test_db011_flags_yield_spanning_rmw():
+    fs = active_for("""
+        def bump(kernel, counter):
+            while True:
+                v = counter.value
+                yield 0.5
+                counter.value = v + 1
+
+        def drive(kernel, counter):
+            kernel.spawn(bump(kernel, counter))
+            kernel.spawn(bump(kernel, counter))
+    """, "DB011")
+    assert len(fs) == 1
+    assert fs[0].line == 6                      # the write-back
+    assert "lost" in fs[0].message
+
+
+def test_db011_clean_when_resource_held_across():
+    assert active_for("""
+        def bump(kernel, counter, lock):
+            while True:
+                yield ("acquire", lock)
+                v = counter.value
+                yield 0.5
+                counter.value = v + 1
+                yield ("release", lock)
+
+        def drive(kernel, counter, lock):
+            kernel.spawn(bump(kernel, counter, lock))
+    """, "DB011") == []
+
+
+def test_db011_ignores_non_kernel_generators():
+    # a plain data generator (never spawned, no protocol yields) is not
+    # a kernel process — interleaving points don't apply to it
+    assert active_for("""
+        def chunks(stream):
+            buf = stream.pending
+            yield buf
+            stream.pending = buf + 1
+    """, "DB011") == []
+
+
+# ---------------------------------------------------------------------------
+# DB012 — daemon mutating version-guarded state under live readers
+# ---------------------------------------------------------------------------
+def test_db012_flags_daemon_topology_mutation():
+    fs = active_for("""
+        def failures(kernel, net):
+            while True:
+                net.set_node_down("cloud0", True)
+                yield 5.0
+
+        def worker(kernel, net):
+            while True:
+                g = net.graph_at(kernel.now)
+                yield 1.0
+
+        def drive(kernel, net):
+            kernel.spawn(worker(kernel, net))
+            kernel.spawn(failures(kernel, net), daemon=True)
+    """, "DB012")
+    assert len(fs) == 1
+    assert "set_node_down" in fs[0].message
+    assert "daemon" in fs[0].message
+
+
+def test_db012_flags_daemon_guarded_container_mutation():
+    fs = active_for("""
+        def pruner(kernel, graph):
+            while True:
+                graph.adj.clear()
+                yield 5.0
+
+        def worker(kernel, graph):
+            while True:
+                yield 1.0
+
+        def drive(kernel, graph):
+            kernel.spawn(worker(kernel, graph))
+            kernel.spawn(pruner(kernel, graph), daemon=True)
+    """, "DB012")
+    assert len(fs) == 1
+    assert ".adj" in fs[0].message
+
+
+def test_db012_clean_when_mutator_is_regular_process():
+    # same mutation from a non-daemon process: the spawn edge + its own
+    # event ordering mediate, and DB006 still covers the version bump
+    assert active_for("""
+        def failures(kernel, net):
+            while True:
+                net.set_node_down("cloud0", True)
+                yield 5.0
+
+        def worker(kernel, net):
+            while True:
+                yield 1.0
+
+        def drive(kernel, net):
+            kernel.spawn(worker(kernel, net))
+            kernel.spawn(failures(kernel, net))
+    """, "DB012") == []
+
+
+def test_db012_clean_without_non_daemon_readers():
+    assert active_for("""
+        def failures(kernel, net):
+            while True:
+                net.set_node_down("cloud0", True)
+                yield 5.0
+
+        def drive(kernel, net):
+            kernel.spawn(failures(kernel, net), daemon=True)
+    """, "DB012") == []
+
+
+# ---------------------------------------------------------------------------
+# DB013 — one mutable container spawned into several processes
+# ---------------------------------------------------------------------------
+def test_db013_flags_shared_container():
+    fs = active_for("""
+        def drive(kernel, worker):
+            shared = []
+            kernel.spawn(worker(shared))
+            kernel.spawn(worker(shared))
+    """, "DB013")
+    assert len(fs) == 1
+    assert "`shared`" in fs[0].message
+    assert "2 spawn sites" in fs[0].message
+
+
+def test_db013_clean_when_copied_at_spawn_site():
+    assert active_for("""
+        def drive(kernel, worker):
+            shared = []
+            kernel.spawn(worker(list(shared)))
+            kernel.spawn(worker(list(shared)))
+    """, "DB013") == []
+
+
+def test_db013_clean_on_single_site_loop():
+    # one spawn site in a loop is one *code* location: sharing there is
+    # usually a deliberate fan-in accumulator, so only distinct call
+    # sites count
+    assert active_for("""
+        def drive(kernel, worker):
+            sink = []
+            for i in range(4):
+                kernel.spawn(worker(sink))
+    """, "DB013") == []
+
+
+# ---------------------------------------------------------------------------
+# satellite pin: DB005's op inventory == the kernel's runtime protocol
+# ---------------------------------------------------------------------------
+def test_known_effect_ops_single_source():
+    """``AnalysisConfig.known_ops`` must equal
+    ``repro.sim.kernel.KNOWN_EFFECT_OPS`` — the lint cannot import the
+    sim (numpy-free CI job), so the literal is pinned here instead."""
+    assert default_config().known_ops == KNOWN_EFFECT_OPS
+    assert KNOWN_EFFECT_OPS == ("acquire", "release")
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer — planted lost update, locked twin, HB edges
+# ---------------------------------------------------------------------------
+class Counter:
+    def __init__(self):
+        self.value = 0
+
+
+def _bump(kernel, counter):
+    kernel.note_access(counter, "value", "r")
+    v = counter.value
+    yield 0.0
+    kernel.note_access(counter, "value", "w")
+    counter.value = v + 1
+
+
+def test_runtime_catches_and_localizes_lost_update():
+    k = SimKernel(race_detect=True)
+    c = Counter()
+    k.spawn(_bump(k, c), label="a")
+    k.spawn(_bump(k, c), label="b")
+    k.run()
+    assert c.value == 1                     # the update really was lost
+    reports = k.races.reports
+    assert len(reports) == 2                # r-vs-w, then w-vs-w
+    first = reports[0]
+    assert first.obj == "Counter" and first.obj_field == "value"
+    # localized to the first conflicting event pair, with both labels:
+    # b's read at event 2 conflicts with a's write-back at event 3
+    assert (first.first.label, first.first.mode,
+            first.first.event_index) == ("b", "r", 2)
+    assert (first.second.label, first.second.mode,
+            first.second.event_index) == ("a", "w", 3)
+    assert "unordered by happens-before" in first.describe()
+    assert "event 2" in first.describe()
+
+
+def _bump_locked(kernel, counter, lock):
+    yield ("acquire", lock)
+    kernel.note_access(counter, "value", "r")
+    v = counter.value
+    yield 0.0
+    kernel.note_access(counter, "value", "w")
+    counter.value = v + 1
+    yield ("release", lock)
+
+
+def test_runtime_clean_under_acquire_release():
+    k = SimKernel(race_detect=True)
+    c = Counter()
+    lock = SlotResource("lock", capacity=1)
+    k.spawn(_bump_locked(k, c, lock), label="a")
+    k.spawn(_bump_locked(k, c, lock), label="b")
+    k.run()
+    assert c.value == 2                     # no lost update
+    assert k.races.ok and k.races.reports == []
+
+
+def test_runtime_spawn_edge_orders_parent_child():
+    # parent writes, then spawns a child that reads at the same
+    # timestamp: the spawn edge orders the pair — no race
+    obj = Counter()
+
+    def child(kernel):
+        kernel.note_access(obj, "value", "r")
+        yield 0.0
+
+    def parent(kernel):
+        kernel.note_access(obj, "value", "w")
+        obj.value = 7
+        kernel.spawn(child(kernel), label="child")
+        yield 0.0
+
+    k = SimKernel(race_detect=True)
+    k.spawn(parent(k), label="parent")
+    k.run()
+    assert k.races.ok
+
+
+def test_runtime_time_order_is_not_a_race():
+    # same conflicting pair, but one simulated second apart: the clock
+    # orders them, so nothing is reported
+    obj = Counter()
+
+    def writer(kernel):
+        kernel.note_access(obj, "value", "w")
+        yield 0.0
+
+    def reader(kernel):
+        yield 1.0
+        kernel.note_access(obj, "value", "r")
+
+    k = SimKernel(race_detect=True)
+    k.spawn(writer(k), label="w")
+    k.spawn(reader(k), label="r")
+    k.run()
+    assert k.races.ok
+
+
+# ---------------------------------------------------------------------------
+# scenario-level gate — the fig20-style DAG+churn+autoscale pin
+# ---------------------------------------------------------------------------
+def _dag_churn_scenario(**kw):
+    base = dict(
+        network=NetworkSpec(regions=2),
+        workload=WorkloadSpec(kind="regional_diurnal", rate=8.0,
+                              peak_to_trough=2.0, seed=11),
+        strategy="databelt", n=12, input_bytes=2e6,
+        workflow="diamond:3",
+        autoscale=AutoscalePolicy(interval_s=0.5, p95_slo_s=2.0),
+        faults=FaultPlan.poisson(rate=0.1, outage_s=6.0,
+                                 targets=("cloud0", "cloud1"),
+                                 horizon_s=14.0, seed=7))
+    base.update(kw)
+    return Scenario(**base)
+
+
+def test_scenario_dag_autoscale_faults_race_clean():
+    check = _dag_churn_scenario().verify_races()
+    assert check.ok
+    assert check.events_processed > 0
+    assert "race-clean" in check.describe()
+    assert str(check.events_processed) in check.describe()
+
+
+def test_race_detection_is_passive():
+    # identical spec with detection on vs off: bit-identical event trace
+    # and metrics — the sanitizer never schedules events
+    on = _dag_churn_scenario(record_trace=True, race_detect=True).run()
+    off = _dag_churn_scenario(record_trace=True, race_detect=False).run()
+    assert on.rep.trace == off.rep.trace
+    assert on.rep.p95 == off.rep.p95
+    assert on.rep.races == [] and off.rep.races is None
+    assert on.rep.race_clean and not off.rep.race_clean
+
+
+def test_scenario_race_detect_roundtrip():
+    sc = _dag_churn_scenario(race_detect=True)
+    assert Scenario.from_dict(sc.to_dict()).race_detect is True
+    assert Scenario.from_dict(
+        _dag_churn_scenario().to_dict()).race_detect is False
+
+
+def test_sequential_workload_rejects_race_detect():
+    sc = Scenario(workload=WorkloadSpec(kind="sequential"),
+                  race_detect=True)
+    with pytest.raises(ValueError, match="nothing to race"):
+        sc.validate()
+
+
+def test_race_check_describe_lists_findings():
+    acc = lambda i, lbl, m: RaceAccess(event_index=i, time=0.0,
+                                       label=lbl, mode=m)
+    check = RaceCheck(
+        scenario=None,
+        races=[RaceReport(obj="Counter", obj_field="value",
+                          first=acc(2, "b", "r"), second=acc(3, "a", "w"))],
+        events_processed=9)
+    assert not check.ok
+    desc = check.describe()
+    assert "1 race(s) detected over 9 events" in desc
+    assert "Counter.value" in desc and "'b'" in desc and "'a'" in desc
